@@ -1,0 +1,75 @@
+"""Tables 2/4/5-flavor quality comparison on the synthetic shifted task.
+
+Pretrain a tiny LM (full FT) on Markov chain A, then PEFT-fine-tune on
+chain B with PSOFT / LoRA / PiSSA / LoRA-XS at comparable budgets; report
+final fine-tuning losses.  The claim checked: PSOFT is competitive with the
+LoRA family at a fraction of the parameters (exact GLUE/GSM-8K numbers are
+not reproducible offline; ordering + learnability are)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.configs import TrainConfig, get_config
+from repro.data import DataConfig, SyntheticLMDataset
+from repro.optim import adamw
+from repro.train import trainer
+
+
+def pretrain(cfg, steps=80):
+    tc = TrainConfig(steps=steps, learning_rate=3e-3, full_finetune=True)
+    state = trainer.init_train_state(jax.random.PRNGKey(0), cfg, tc)
+    step = jax.jit(trainer.make_train_step(cfg, tc, "dense"))
+    ds = SyntheticLMDataset(cfg, 16, 64)
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}
+        state, m = step(state, b)
+    return adamw.combine(state.trainable, state.frozen), float(m["loss"])
+
+
+def finetune(cfg, base, method, rank, steps=60, lr=5e-3):
+    from repro.core import peft
+    from repro.models import model as model_lib
+    pcfg = cfg.replace(peft=cfg.peft.replace(method=method, rank=rank))
+    params = model_lib.rewrap_peft(peft.merge_tree(base, cfg.peft), pcfg)
+    mask = model_lib.trainable_mask(pcfg, params)
+    tr, fr = adamw.partition(params, mask)
+    state = trainer.TrainState(jnp.zeros((), jnp.int32), tr, fr,
+                               adamw.adamw_init(tr))
+    tc = TrainConfig(steps=steps, learning_rate=lr)
+    step = jax.jit(trainer.make_train_step(pcfg, tc, "dense"))
+    ds = SyntheticLMDataset(pcfg, 16, 64, DataConfig(seed=999))
+    n_tr = sum(int(x.size) for x in jax.tree.leaves(tr))
+    losses = []
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}
+        state, m = step(state, b)
+        losses.append(float(m["loss"]))
+    return n_tr, losses[0], float(np.mean(losses[-5:]))
+
+
+def main():
+    cfg = get_config("tiny")
+    base, pre_loss = pretrain(cfg)
+    csv_row("convergence_pretrain", 0, f"loss={pre_loss:.3f}")
+    rows = {}
+    for method, rank in (("psoft", 46), ("lora", 4), ("pissa", 4),
+                         ("lora_xs", 16), ("oft", 8)):
+        n, first, last = finetune(cfg, base, method, rank)
+        rows[method] = (n, first, last)
+        csv_row(f"convergence_{method}", 0,
+                f"params={n};first={first:.3f};final={last:.3f}")
+    # everything learns the shifted task
+    for m, (n, first, last) in rows.items():
+        assert last < first + 0.02, (m, first, last)
+    # PSOFT budget below LoRA's (the paper's efficiency axis); quality gap
+    # at this miniature scale is reported, not asserted (the paper's quality
+    # numbers need real benchmarks)
+    assert rows["psoft"][0] < rows["lora"][0]
+    print(f"# convergence anchors PASS "
+          f"(psoft {rows['psoft'][0]} params @ {rows['psoft'][2]:.3f} vs "
+          f"lora {rows['lora'][0]} params @ {rows['lora'][2]:.3f})")
+
+
+if __name__ == "__main__":
+    main()

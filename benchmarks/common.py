@@ -1,0 +1,39 @@
+"""Shared benchmark helpers."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PEFTConfig
+
+# paper model geometries
+DEBERTA = dict(d_model=768, d_ff=3072, num_layers=12)      # DeBERTaV3-base
+LLAMA32_3B = dict(d_model=3072, d_ff=8192, num_layers=28)  # LLaMA-3.2-3B
+
+
+def method_cfgs(rank_psoft=46, rank_lora=8, rank_xs=136):
+    """The paper's Table 2 method lineup with its reported ranks."""
+    return {
+        "psoft": PEFTConfig(method="psoft", rank=rank_psoft),
+        "lora": PEFTConfig(method="lora", rank=rank_lora),
+        "pissa": PEFTConfig(method="pissa", rank=rank_lora),
+        "dora": PEFTConfig(method="dora", rank=rank_lora),
+        "lora_xs": PEFTConfig(method="lora_xs", rank=rank_xs),
+        "oft": PEFTConfig(method="oft", oft_block_size=32),
+        "boft": PEFTConfig(method="boft", boft_blocks=8, boft_factors=2),
+        "goft": PEFTConfig(method="goft"),
+        "qgoft": PEFTConfig(method="qgoft"),
+    }
+
+
+def timeit(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def csv_row(name, us_per_call, derived=""):
+    print(f"{name},{us_per_call:.1f},{derived}")

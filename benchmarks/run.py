@@ -1,0 +1,38 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure.
+
+    Table 8 + Tables 2/4 #Params  -> bench_params
+    Table 9 / Fig 4a (act. mem)   -> bench_activation_memory
+    Figs 9/10 (geometry)          -> bench_geometry
+    Fig 8b (Neumann sweep)        -> bench_neumann
+    Fig 4b (training speed)       -> bench_speed
+    Tables 2/4/5 (quality proxy)  -> bench_convergence
+    beyond-paper kernel fusion    -> bench_kernels
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_activation_memory, bench_convergence,
+                            bench_geometry, bench_kernels, bench_neumann,
+                            bench_params, bench_speed)
+    mods = [bench_params, bench_geometry, bench_neumann, bench_kernels,
+            bench_activation_memory, bench_speed, bench_convergence]
+    failed = []
+    for mod in mods:
+        name = mod.__name__.split(".")[-1]
+        print(f"\n=== {name} ===")
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"\nFAILED: {failed}")
+        sys.exit(1)
+    print("\nall benchmarks passed")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,54 @@
+"""Serving example: fine-tune with PSOFT, MERGE, serve batched requests.
+
+    PYTHONPATH=src python examples/serve_psoft.py
+
+Shows the reparameterization-method deployment story: after merging, the
+serving graph is the plain base model (zero adapter latency), running
+batched prefill + KV-cache decode through the continuous-batching engine.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import TrainConfig, get_config
+from repro.data import SyntheticLMDataset
+from repro.models import model as model_lib
+from repro.serve import Request, ServeEngine
+from repro.train import trainer
+from repro.optim import adamw
+
+cfg = get_config("tiny")
+print("training a tiny PSOFT model on the Markov task...")
+tc = TrainConfig(steps=150, learning_rate=5e-3, full_finetune=True)
+state = trainer.init_train_state(jax.random.PRNGKey(0), cfg, tc)
+step = jax.jit(trainer.make_train_step(cfg, tc, "dense"))
+ds = SyntheticLMDataset(cfg, 16, 64)
+for i in range(150):
+    b = {k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}
+    state, m = step(state, b)
+print(f"train loss: {float(m['loss']):.3f}")
+params = adamw.combine(state.trainable, state.frozen)
+
+print("\nmerging PSOFT adapters + serving 6 requests on 2 slots...")
+engine = ServeEngine(params, cfg, max_len=64, slots=2)
+rng = np.random.default_rng(0)
+reqs = [Request(uid=i,
+                prompt=rng.integers(0, cfg.vocab_size, size=8,
+                                    dtype=np.int32),
+                max_new_tokens=12) for i in range(6)]
+done = engine.run(reqs)
+for r in sorted(done, key=lambda r: r.uid):
+    print(f"  req {r.uid}: prompt={list(r.prompt[:4])}... -> "
+          f"generated {r.generated}")
+
+# sanity: generations follow the learned Markov chain more often than chance
+succ = ds.succ
+hits = total = 0
+for r in done:
+    seq = list(r.prompt) + r.generated
+    for a, b in zip(seq[:-1], seq[1:]):
+        hits += b in succ[a]
+        total += 1
+print(f"\nMarkov-successor rate of generations: {hits}/{total} "
+      f"({hits/total:.0%}; chance would be "
+      f"{ds.dc.branching/cfg.vocab_size:.1%})")

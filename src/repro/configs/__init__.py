@@ -1,0 +1,22 @@
+"""Architecture registry. Importing this package registers all configs."""
+from repro.configs.base import (  # noqa: F401
+    InputShape, LM_SHAPES, MeshConfig, ModelConfig, MoEConfig, PEFTConfig,
+    SSMConfig, TrainConfig, get_config, list_configs, register,
+    shape_applicable,
+)
+
+# Assigned architectures (import for registration side-effect)
+from repro.configs import archs  # noqa: F401,E402
+
+ASSIGNED_ARCHS = (
+    "mamba2-1.3b",
+    "starcoder2-15b",
+    "granite-8b",
+    "internlm2-1.8b",
+    "nemotron-4-15b",
+    "internvl2-26b",
+    "dbrx-132b",
+    "deepseek-moe-16b",
+    "zamba2-1.2b",
+    "seamless-m4t-medium",
+)

@@ -1,0 +1,176 @@
+"""The 10 assigned architectures (exact configs from the task spec) + paper models.
+
+Each returns a full-size ModelConfig; ``cfg.reduced()`` gives the CPU smoke-test
+variant of the same family.
+"""
+from repro.configs.base import (
+    ModelConfig, MoEConfig, PEFTConfig, SSMConfig, register,
+)
+
+
+# --- SSM -------------------------------------------------------------------
+
+@register("mamba2-1.3b")
+def mamba2_1p3b() -> ModelConfig:
+    # [arXiv:2405.21060] 48L d_model=2048, attn-free SSD, ssm_state=128, vocab 50280
+    return ModelConfig(
+        name="mamba2-1.3b", family="ssm",
+        num_layers=48, d_model=2048, num_heads=64, num_kv_heads=64, head_dim=64,
+        d_ff=0, vocab_size=50280, mlp_type="swiglu", norm_type="rmsnorm",
+        ssm=SSMConfig(state_size=128, head_dim=64, expand=2, conv_width=4,
+                      chunk_size=256),
+        peft=PEFTConfig(rank=64, target_modules=("in_proj", "out_proj")),
+    )
+
+
+# --- dense -----------------------------------------------------------------
+
+@register("starcoder2-15b")
+def starcoder2_15b() -> ModelConfig:
+    # [arXiv:2402.19173] 40L d=6144 48H GQA kv=4 ffn=24576 vocab=49152, GQA+RoPE
+    return ModelConfig(
+        name="starcoder2-15b", family="dense",
+        num_layers=40, d_model=6144, num_heads=48, num_kv_heads=4, head_dim=128,
+        d_ff=24576, vocab_size=49152, mlp_type="gelu", norm_type="layernorm",
+        peft=PEFTConfig(rank=128, target_modules=("q", "k", "v", "o", "up", "down")),
+    )
+
+
+@register("granite-8b")
+def granite_8b() -> ModelConfig:
+    # [arXiv:2405.04324] llama-arch 36L d=4096 32H kv=8 ffn=14336 vocab=49152
+    return ModelConfig(
+        name="granite-8b", family="dense",
+        num_layers=36, d_model=4096, num_heads=32, num_kv_heads=8, head_dim=128,
+        d_ff=14336, vocab_size=49152, mlp_type="swiglu",
+        peft=PEFTConfig(rank=128),
+    )
+
+
+@register("internlm2-1.8b")
+def internlm2_1p8b() -> ModelConfig:
+    # [arXiv:2403.17297] 24L d=2048 16H kv=8 ffn=8192 vocab=92544
+    return ModelConfig(
+        name="internlm2-1.8b", family="dense",
+        num_layers=24, d_model=2048, num_heads=16, num_kv_heads=8, head_dim=128,
+        d_ff=8192, vocab_size=92544, mlp_type="swiglu",
+        peft=PEFTConfig(rank=64),
+    )
+
+
+@register("nemotron-4-15b")
+def nemotron4_15b() -> ModelConfig:
+    # [arXiv:2402.16819] 32L d=6144 48H kv=8 ffn=24576 vocab=256000, squared-ReLU
+    return ModelConfig(
+        name="nemotron-4-15b", family="dense",
+        num_layers=32, d_model=6144, num_heads=48, num_kv_heads=8, head_dim=128,
+        d_ff=24576, vocab_size=256000, mlp_type="relu2", norm_type="layernorm",
+        peft=PEFTConfig(rank=128, target_modules=("q", "k", "v", "o", "up", "down")),
+    )
+
+
+# --- VLM (stub frontend) ----------------------------------------------------
+
+@register("internvl2-26b")
+def internvl2_26b() -> ModelConfig:
+    # [arXiv:2404.16821] InternViT (stub) + InternLM2 backbone:
+    # 48L d=6144 48H kv=8 ffn=16384 vocab=92553
+    return ModelConfig(
+        name="internvl2-26b", family="vlm",
+        num_layers=48, d_model=6144, num_heads=48, num_kv_heads=8, head_dim=128,
+        d_ff=16384, vocab_size=92553, mlp_type="swiglu",
+        num_patch_tokens=256,  # precomputed InternViT patch embeddings (stub)
+        peft=PEFTConfig(rank=128),
+    )
+
+
+# --- MoE -------------------------------------------------------------------
+
+@register("dbrx-132b")
+def dbrx_132b() -> ModelConfig:
+    # [hf:databricks/dbrx-base] 40L d=6144 48H kv=8 ffn=10752 vocab=100352,
+    # 16 experts top-4 fine-grained
+    return ModelConfig(
+        name="dbrx-132b", family="moe",
+        num_layers=40, d_model=6144, num_heads=48, num_kv_heads=8, head_dim=128,
+        d_ff=10752, vocab_size=100352, mlp_type="swiglu", norm_type="layernorm",
+        moe=MoEConfig(num_experts=16, top_k=4, capacity_factor=1.25, sharding="ep"),
+        peft=PEFTConfig(rank=128),
+    )
+
+
+@register("deepseek-moe-16b")
+def deepseek_moe_16b() -> ModelConfig:
+    # [arXiv:2401.06066] 28L d=2048 16H kv=16 ffn=1408/expert vocab=102400,
+    # 2 shared + 64 routed top-6
+    return ModelConfig(
+        name="deepseek-moe-16b", family="moe",
+        num_layers=28, d_model=2048, num_heads=16, num_kv_heads=16, head_dim=128,
+        d_ff=1408, vocab_size=102400, mlp_type="swiglu",
+        moe=MoEConfig(num_experts=64, num_shared_experts=2, top_k=6,
+                      capacity_factor=1.25, sharding="ep"),
+        peft=PEFTConfig(rank=64),
+    )
+
+
+# --- hybrid ----------------------------------------------------------------
+
+@register("zamba2-1.2b")
+def zamba2_1p2b() -> ModelConfig:
+    # [arXiv:2411.15242] 38L d=2048 Mamba2 backbone + shared attention blocks,
+    # 32H kv=32 ffn=8192 vocab=32000 ssm_state=64
+    return ModelConfig(
+        name="zamba2-1.2b", family="hybrid",
+        num_layers=38, d_model=2048, num_heads=32, num_kv_heads=32, head_dim=64,
+        d_ff=8192, vocab_size=32000, mlp_type="swiglu",
+        ssm=SSMConfig(state_size=64, head_dim=64, expand=2, conv_width=4,
+                      chunk_size=256),
+        hybrid_attn_every=6,
+        peft=PEFTConfig(rank=64, target_modules=(
+            "q", "k", "v", "o", "gate", "up", "down", "in_proj", "out_proj")),
+    )
+
+
+# --- audio enc-dec (stub frontend) ------------------------------------------
+
+@register("seamless-m4t-medium")
+def seamless_m4t_medium() -> ModelConfig:
+    # [arXiv:2308.11596] enc-dec 12L d=1024 16H kv=16 ffn=4096 vocab=256206
+    return ModelConfig(
+        name="seamless-m4t-medium", family="audio",
+        num_layers=12, num_encoder_layers=12, is_encoder_decoder=True,
+        d_model=1024, num_heads=16, num_kv_heads=16, head_dim=64,
+        d_ff=4096, vocab_size=256206, mlp_type="gelu", norm_type="layernorm",
+        peft=PEFTConfig(rank=48),
+    )
+
+
+# --- paper's own models (examples / small-scale validation) -----------------
+
+@register("llama32-3b")
+def llama32_3b() -> ModelConfig:
+    # LLaMA-3.2-3B (paper's decoder-only testbed)
+    return ModelConfig(
+        name="llama32-3b", family="dense",
+        num_layers=28, d_model=3072, num_heads=24, num_kv_heads=8, head_dim=128,
+        d_ff=8192, vocab_size=128256, mlp_type="swiglu",
+        peft=PEFTConfig(rank=352),  # paper Table 4
+    )
+
+
+@register("lm-100m")
+def lm_100m() -> ModelConfig:
+    # ~100M-param model for the end-to-end training example
+    return ModelConfig(
+        name="lm-100m", family="dense",
+        num_layers=12, d_model=768, num_heads=12, num_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab_size=32000, mlp_type="swiglu", max_seq_len=1024,
+        peft=PEFTConfig(rank=46),  # paper's DeBERTa rank
+    )
+
+
+@register("tiny")
+def tiny() -> ModelConfig:
+    return ModelConfig(name="tiny", family="dense", dtype="float32",
+                       param_dtype="float32",
+                       peft=PEFTConfig(rank=8))

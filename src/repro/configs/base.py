@@ -1,0 +1,300 @@
+"""Config system for the PSOFT reproduction framework.
+
+Plain dataclasses (no external deps), dict-override based, with a registry of
+named architectures.  Every assigned architecture lives in its own module under
+``repro.configs`` and registers a :class:`ModelConfig` factory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+VOCAB_PAD_MULTIPLE = 256  # Megatron-style embedding padding for TP divisibility
+
+
+# ---------------------------------------------------------------------------
+# PEFT config
+# ---------------------------------------------------------------------------
+
+PEFT_METHODS = (
+    "none",      # plain frozen linear (or full FT)
+    "psoft",     # the paper's method (strict orthogonality if relax_vectors=False)
+    "lora",
+    "pissa",     # LoRA with principal-SVD init
+    "dora",
+    "lora_xs",
+    "oft",       # block-diagonal OFTv2 (Cayley-Neumann)
+    "boft",      # butterfly OFT
+    "goft",      # Givens-rotation OFT (qGOFT when relaxed)
+)
+
+
+@dataclass
+class PEFTConfig:
+    method: str = "psoft"
+    rank: int = 64                  # r for psoft/lora/pissa/dora/lora_xs
+    relax_vectors: bool = True      # PSOFT alpha/beta (Eq. 8); False = strict (Eq. 7)
+    neumann_terms: int = 5          # K in the truncated Neumann series (paper: 5)
+    exact_cayley: bool = False      # use exact (I+Q)^-1 solve instead of Neumann
+    lora_alpha: float = 16.0        # LoRA scaling
+    oft_block_size: int = 32        # b for block-diagonal OFT
+    boft_blocks: int = 8            # b for BOFT
+    boft_factors: int = 2           # m for BOFT
+    # which logical module names get wrapped ("q","k","v","o","gate","up","down",
+    # "in_proj","out_proj","w1","w2","router")
+    target_modules: Tuple[str, ...] = (
+        "q", "k", "v", "o", "gate", "up", "down", "in_proj", "out_proj",
+    )
+    # fuse the subspace path with the residual matmul via the Pallas kernel
+    use_fused_kernel: bool = False
+
+    def replace(self, **kw) -> "PEFTConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MoEConfig:
+    num_experts: int = 0            # routed experts (0 = dense)
+    num_shared_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    sharding: str = "ep"            # "ep" (experts over model axis) or "tp"
+    aux_loss_weight: float = 0.01
+
+
+@dataclass
+class SSMConfig:
+    state_size: int = 128           # N, the SSD state dimension
+    head_dim: int = 64              # P, per-head channel dim
+    expand: int = 2                 # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk_size: int = 256           # SSD intra-chunk block length
+    ngroups: int = 1                # B/C groups
+
+
+@dataclass
+class ModelConfig:
+    name: str = "tiny"
+    family: str = "dense"           # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0               # 0 => d_model // num_heads
+    d_ff: int = 512
+    vocab_size: int = 1024
+    max_seq_len: int = 4096
+    # MLP/act
+    mlp_type: str = "swiglu"        # swiglu | gelu | relu2
+    norm_type: str = "rmsnorm"      # rmsnorm | layernorm
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    logits_softcap: float = 0.0
+    # family-specific
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    # hybrid (zamba2-style): a shared attention block applied every k ssm layers
+    hybrid_attn_every: int = 6
+    # vlm: number of prepended patch-embedding positions provided by the stub
+    num_patch_tokens: int = 0
+    # audio/enc-dec
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    # per-layer pattern for hybrid archs: "M"=mamba, "A"=attention (derived)
+    # precision
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"   # frozen base weights
+    peft_dtype: str = "float32"     # trainable PEFT params
+    # remat
+    remat_policy: str = "full"      # none | minimal | full
+    scan_layers: bool = True        # False: unrolled layer loop (dry-run
+                                    # cost-analysis exactness; params stay
+                                    # stacked either way)
+    unroll_loops: bool = False      # unroll loss-chunk loop (same reason)
+    # PEFT
+    peft: PEFTConfig = field(default_factory=PEFTConfig)
+
+    # ---- derived ----
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def padded_vocab_size(self) -> int:
+        return _round_up(self.vocab_size, VOCAB_PAD_MULTIPLE)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic archs (SSM/hybrid) run the long_500k shape."""
+        return self.family in ("ssm", "hybrid")
+
+    def layer_pattern(self) -> str:
+        """One char per decoder layer: M (mamba2 SSD) or A (attention block)."""
+        if self.family == "ssm":
+            return "M" * self.num_layers
+        if self.family == "hybrid":
+            k = self.hybrid_attn_every
+            return "".join(
+                "A" if (i % k == k - 1) else "M" for i in range(self.num_layers)
+            )
+        return "A" * self.num_layers
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self, **extra) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        kw: Dict[str, Any] = dict(
+            num_layers=min(self.num_layers, 2 if self.family != "hybrid" else 4),
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2),
+            head_dim=16,
+            d_ff=128,
+            vocab_size=256,
+            max_seq_len=128,
+            dtype="float32",
+            param_dtype="float32",
+            scan_layers=True,
+        )
+        if self.family in ("moe",):
+            kw["moe"] = dataclasses.replace(
+                self.moe, num_experts=4, top_k=2,
+                num_shared_experts=min(self.moe.num_shared_experts, 1))
+            kw["d_ff"] = 64
+        if self.family in ("ssm", "hybrid"):
+            kw["ssm"] = dataclasses.replace(
+                self.ssm, state_size=16, head_dim=16, chunk_size=32)
+            kw["hybrid_attn_every"] = 2
+        if self.family == "vlm":
+            kw["num_patch_tokens"] = 8
+        if self.is_encoder_decoder:
+            kw["num_encoder_layers"] = 2
+        kw["peft"] = dataclasses.replace(self.peft, rank=8)
+        kw.update(extra)
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned per-arch shape sets)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+LM_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Return (runnable, reason-if-skipped) for an (arch, shape) cell."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "full-attention arch: long_500k needs sub-quadratic attention"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Train / mesh configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TrainConfig:
+    learning_rate: float = 4e-4
+    head_learning_rate: float = 5e-4
+    warmup_ratio: float = 0.1
+    schedule: str = "cosine"        # cosine | linear | constant
+    weight_decay: float = 0.0
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    grad_clip_norm: float = 1.0
+    steps: int = 100
+    microbatches: int = 1           # gradient accumulation
+    full_finetune: bool = False     # True = FFT baseline (all params trainable)
+    grad_allreduce_dtype: str = ""  # "" | "bfloat16" | "int8" (compression)
+    seed: int = 0
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: str = ""
+    keep_checkpoints: int = 3
+    async_checkpoint: bool = True
+
+
+@dataclass
+class MeshConfig:
+    multi_pod: bool = False
+    # single pod (data, model); multi-pod (pod, data, model)
+    pod: int = 2
+    data: int = 16
+    model: int = 16
+    # how the "pod" axis is used: "dp" (default) or "pp" (pipeline stages)
+    pod_role: str = "dp"
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (self.pod, self.data, self.model) if self.multi_pod else (
+            self.data, self.model)
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    import repro.configs  # noqa: F401 - triggers arch module imports
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    cfg = _REGISTRY[name]()
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg
+
+
+def list_configs() -> List[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)

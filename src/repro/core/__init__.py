@@ -1,0 +1,3 @@
+# PSOFT (the paper's primary contribution) + every baseline it compares
+# against, behind one dispatcher (repro.core.peft).
+from repro.core import cayley, lora, oft, peft, psoft  # noqa: F401

@@ -1,0 +1,82 @@
+"""Cayley parameterization of the orthogonal group (paper §4.2, Appendix C).
+
+R = (I - Q)(I + Q)^{-1} with Q skew-symmetric.  Following OFTv2 (Qiu et al.,
+2025) and the paper's §5, the inverse is approximated with a truncated Neumann
+series  (I + Q)^{-1} ≈ Σ_{k=0}^{K} (−Q)^k  (K = 5 by default), which replaces a
+serial triangular solve with K MXU-friendly matmuls.  The exact solve is kept
+as the reference path.
+
+Q is stored as its strictly-lower-triangular entries — exactly r(r−1)/2
+trainable parameters (Table 8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def num_skew_params(r: int) -> int:
+    return r * (r - 1) // 2
+
+
+@functools.lru_cache(maxsize=None)
+def _tril_indices(r: int):
+    # cache numpy (constant) indices; never cache traced jnp values
+    return np.tril_indices(r, k=-1)
+
+
+def skew_from_flat(q_flat: jax.Array, r: int) -> jax.Array:
+    """Build the skew-symmetric Q (r×r) from its r(r-1)/2 free entries."""
+    i, j = _tril_indices(r)
+    q = jnp.zeros((r, r), dtype=q_flat.dtype)
+    q = q.at[i, j].set(q_flat)
+    return q - q.T
+
+
+def flat_from_skew(q: jax.Array) -> jax.Array:
+    r = q.shape[-1]
+    i, j = _tril_indices(r)
+    return q[..., i, j]
+
+
+def neumann_inverse_series(q: jax.Array, terms: int) -> jax.Array:
+    """Σ_{k=0}^{K} (−Q)^k via Horner iteration: S ← I − Q·S."""
+    eye = jnp.eye(q.shape[-1], dtype=q.dtype)
+
+    def body(s, _):
+        return eye - q @ s, None
+
+    s, _ = jax.lax.scan(body, eye, None, length=terms)
+    return s
+
+
+def cayley_neumann(q_flat: jax.Array, r: int, terms: int = 5) -> jax.Array:
+    """R ≈ (I − Q) Σ_{k=0}^{K}(−Q)^k — near-orthogonal for small ‖Q‖."""
+    q = skew_from_flat(q_flat.astype(jnp.float32), r)
+    eye = jnp.eye(r, dtype=jnp.float32)
+    s = neumann_inverse_series(q, terms)
+    return (eye - q) @ s
+
+
+def cayley_exact(q_flat: jax.Array, r: int) -> jax.Array:
+    """R = (I − Q)(I + Q)^{-1} via exact solve (reference path).
+
+    (I − Q) and (I + Q)^{-1} commute, so solve(I+Q, I−Q) is equivalent.
+    """
+    q = skew_from_flat(q_flat.astype(jnp.float32), r)
+    eye = jnp.eye(r, dtype=jnp.float32)
+    return jnp.linalg.solve(eye + q, eye - q)
+
+
+def make_rotation(q_flat: jax.Array, r: int, terms: int = 5,
+                  exact: bool = False) -> jax.Array:
+    return cayley_exact(q_flat, r) if exact else cayley_neumann(q_flat, r, terms)
+
+
+def orthogonality_error(r_mat: jax.Array) -> jax.Array:
+    """‖RᵀR − I‖_F — the paper's deviation metric (§4.3, Table 6)."""
+    eye = jnp.eye(r_mat.shape[-1], dtype=r_mat.dtype)
+    return jnp.linalg.norm(r_mat.T @ r_mat - eye)

@@ -1,0 +1,185 @@
+"""Full-space OFT baselines: block-diagonal OFTv2, butterfly BOFT, Givens GOFT.
+
+All rotate the *input* dimension of W (paper Eq. 2: W' = R W_pre, which under
+our ``y = x @ W`` convention is ``y = (x @ Rᵀ) @ W``; since R is a free
+orthogonal parameter initialized at I we absorb the transpose and write
+``y = rotate(x) @ W``).  These exist as faithful comparison baselines — their
+cost profiles (O(bsh) / O(mbsh) / O(bsh·log h) extra activations, Appendix E)
+are part of what the paper measures PSOFT against.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cayley
+
+
+# ----------------------------------------------------- block-diagonal OFTv2
+
+def oft_init(w_pre, block_size, param_dtype=jnp.bfloat16,
+             peft_dtype=jnp.float32) -> Dict[str, jax.Array]:
+    d_in, d_out = w_pre.shape
+    b = block_size
+    assert d_in % b == 0, f"d_in={d_in} not divisible by OFT block {b}"
+    return {
+        "w": w_pre.astype(param_dtype),
+        "q": jnp.zeros((d_in // b, cayley.num_skew_params(b)), peft_dtype),
+        "out_scale": jnp.ones((d_out,), peft_dtype),   # OFTv2 scaling vector
+    }
+
+
+def _block_rotations(q_flat: jax.Array, b: int, terms: int) -> jax.Array:
+    return jax.vmap(lambda q: cayley.cayley_neumann(q, b, terms))(q_flat)
+
+
+def oft_apply(params, x, block_size, neumann_terms=5,
+              compute_dtype=jnp.bfloat16):
+    b = block_size
+    rots = _block_rotations(params["q"], b, neumann_terms)     # (d/b, b, b)
+    x = x.astype(compute_dtype)
+    xb = x.reshape(*x.shape[:-1], -1, b)
+    xr = jnp.einsum("...gb,gbc->...gc", xb, rots.astype(compute_dtype))
+    xr = xr.reshape(*x.shape)
+    y = xr @ params["w"].astype(compute_dtype)
+    return y * params["out_scale"].astype(compute_dtype)
+
+
+def oft_merge(params, block_size, neumann_terms=5):
+    b = block_size
+    rots = _block_rotations(params["q"], b, neumann_terms)
+    w = params["w"].astype(jnp.float32)
+    wb = w.reshape(-1, b, w.shape[-1])                         # (d/b, b, n)
+    # apply rotates x by M = blockdiag(R_g) (y = x@M@W), so W' = M @ W
+    wr = jnp.einsum("gbc,gcn->gbn", rots, wb)
+    w = wr.reshape(w.shape) * params["out_scale"].astype(jnp.float32)[None, :]
+    return w.astype(params["w"].dtype)
+
+
+def oft_num_params(d_in, d_out, block_size):
+    return (d_in // block_size) * cayley.num_skew_params(block_size) + d_out
+
+
+# ------------------------------------------------------------ butterfly BOFT
+
+def _butterfly_perm(d: int, block: int, level: int) -> jnp.ndarray:
+    """Stride permutation pairing indices at distance block·2^level.
+
+    Gives each factor a different block partition so the product of m
+    block-diagonal rotations densifies (butterfly factorization).
+    """
+    stride = (block * (2 ** level)) % d
+    if stride in (0, 1):
+        return jnp.arange(d)
+    idx = jnp.arange(d).reshape(stride, d // stride).T.reshape(-1)
+    return idx
+
+
+def boft_init(w_pre, block_size, num_factors, param_dtype=jnp.bfloat16,
+              peft_dtype=jnp.float32):
+    d_in, d_out = w_pre.shape
+    b = block_size
+    assert d_in % b == 0
+    return {
+        "w": w_pre.astype(param_dtype),
+        "q": jnp.zeros((num_factors, d_in // b, cayley.num_skew_params(b)),
+                       peft_dtype),
+        "out_scale": jnp.ones((d_out,), peft_dtype),
+    }
+
+
+def boft_apply(params, x, block_size, neumann_terms=5,
+               compute_dtype=jnp.bfloat16):
+    b = block_size
+    d = x.shape[-1]
+    x = x.astype(compute_dtype)
+    m = params["q"].shape[0]
+    for lvl in range(m):
+        perm = _butterfly_perm(d, b, lvl)
+        inv = jnp.argsort(perm)
+        rots = _block_rotations(params["q"][lvl], b, neumann_terms)
+        xp = jnp.take(x, perm, axis=-1)
+        xb = xp.reshape(*xp.shape[:-1], -1, b)
+        xr = jnp.einsum("...gb,gbc->...gc", xb, rots.astype(compute_dtype))
+        x = jnp.take(xr.reshape(*xp.shape), inv, axis=-1)
+    y = x @ params["w"].astype(compute_dtype)
+    return y * params["out_scale"].astype(compute_dtype)
+
+
+def boft_merge(params, block_size, neumann_terms=5):
+    d = params["w"].shape[0]
+    eye = jnp.eye(d, dtype=jnp.float32)
+    rot_full = boft_apply({**params, "w": eye.astype(params["w"].dtype),
+                           "out_scale": jnp.ones((d,), jnp.float32)},
+                          eye, block_size, neumann_terms,
+                          compute_dtype=jnp.float32)
+    w = rot_full @ params["w"].astype(jnp.float32)
+    return (w * params["out_scale"].astype(jnp.float32)[None, :]).astype(
+        params["w"].dtype)
+
+
+def boft_num_params(d_in, d_out, block_size, num_factors):
+    return num_factors * (d_in // block_size) * cayley.num_skew_params(
+        block_size) + d_out
+
+
+# -------------------------------------------------------- Givens GOFT/qGOFT
+
+def goft_init(w_pre, quasi: bool, param_dtype=jnp.bfloat16,
+              peft_dtype=jnp.float32):
+    """log2(d) levels of d/2 pairwise 2×2 transforms (Ma et al., 2024).
+
+    GOFT: one angle per pair (strict rotations).  qGOFT: a general 2×2 per
+    pair (4 params — the paper's '4× parameters of GOFT' relaxation).
+    """
+    d_in, d_out = w_pre.shape
+    levels = max(1, int(math.log2(d_in)))
+    if quasi:
+        g = jnp.tile(jnp.eye(2, dtype=peft_dtype)[None, None],
+                     (levels, d_in // 2, 1, 1))
+        return {"w": w_pre.astype(param_dtype), "g": g}
+    return {"w": w_pre.astype(param_dtype),
+            "theta": jnp.zeros((levels, d_in // 2), peft_dtype)}
+
+
+def _givens_rotations(theta: jax.Array) -> jax.Array:
+    c, s = jnp.cos(theta), jnp.sin(theta)
+    return jnp.stack([jnp.stack([c, -s], -1), jnp.stack([s, c], -1)], -2)
+
+
+def goft_apply(params, x, compute_dtype=jnp.bfloat16):
+    d = x.shape[-1]
+    x = x.astype(compute_dtype)
+    quasi = "g" in params
+    levels = (params["g"] if quasi else params["theta"]).shape[0]
+    for lvl in range(levels):
+        stride = 2 ** (lvl % max(1, int(math.log2(d))))
+        perm = _butterfly_perm(d, 1, lvl)  # reuse stride pairing
+        inv = jnp.argsort(perm)
+        rots = (params["g"][lvl] if quasi
+                else _givens_rotations(params["theta"][lvl]))
+        xp = jnp.take(x, perm, axis=-1)
+        xb = xp.reshape(*xp.shape[:-1], -1, 2)
+        xr = jnp.einsum("...gb,gbc->...gc", xb, rots.astype(compute_dtype))
+        x = jnp.take(xr.reshape(*xp.shape), inv, axis=-1)
+        del stride
+    return x @ params["w"].astype(compute_dtype)
+
+
+def goft_merge(params):
+    d = params["w"].shape[0]
+    eye = jnp.eye(d, dtype=jnp.float32)
+    rot = goft_apply({k: v for k, v in params.items() if k != "w"}
+                     | {"w": eye.astype(params["w"].dtype)},
+                     eye, compute_dtype=jnp.float32)
+    return (rot @ params["w"].astype(jnp.float32)).astype(params["w"].dtype)
+
+
+def goft_num_params(d_in, quasi: bool):
+    levels = max(1, int(math.log2(d_in)))
+    per = 4 if quasi else 1
+    return levels * (d_in // 2) * per

@@ -1,0 +1,238 @@
+"""PEFT dispatcher: one interface over PSOFT and every baseline.
+
+A "linear" is a param dict whose structure encodes the method:
+
+    none    : {"w"}
+    psoft   : {"w_res","A","B","q"[,"alpha","beta"]}
+    lora/pissa : {"w","a","b"}
+    dora    : {"w","a","b","m"}
+    lora_xs : {"w","a","b","s"}
+    oft     : {"w","q","out_scale"}
+    boft    : {"w","q","out_scale"}        (q has a leading factor axis)
+    goft/qgoft : {"w","theta"} / {"w","g"}
+
+The model layer code only ever calls :func:`apply_linear` /
+:func:`init_linear` / :func:`merge_linear`; swapping the PEFT method is a
+config change.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PEFTConfig
+from repro.core import cayley, lora, oft, psoft
+
+
+def _dt(name: str):
+    return getattr(jnp, name) if isinstance(name, str) else name
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_linear(key: jax.Array, w_pre: jax.Array, cfg: PEFTConfig,
+                wrapped: bool, param_dtype=jnp.bfloat16,
+                peft_dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Build the param dict for one linear given its pre-trained weight."""
+    if not wrapped or cfg.method == "none":
+        return {"w": w_pre.astype(param_dtype)}
+    m = cfg.method
+    if m == "psoft":
+        return psoft.psoft_init(w_pre, cfg.rank, cfg.relax_vectors,
+                                param_dtype, peft_dtype)
+    if m == "lora":
+        return lora.lora_init(key, w_pre, cfg.rank, param_dtype, peft_dtype)
+    if m == "pissa":
+        return lora.pissa_init(w_pre, cfg.rank, param_dtype, peft_dtype)
+    if m == "dora":
+        return lora.dora_init(key, w_pre, cfg.rank, param_dtype, peft_dtype)
+    if m == "lora_xs":
+        return lora.lora_xs_init(w_pre, cfg.rank, param_dtype, peft_dtype)
+    if m == "oft":
+        return oft.oft_init(w_pre, cfg.oft_block_size, param_dtype, peft_dtype)
+    if m == "boft":
+        return oft.boft_init(w_pre, cfg.boft_blocks, cfg.boft_factors,
+                             param_dtype, peft_dtype)
+    if m == "goft":
+        return oft.goft_init(w_pre, False, param_dtype, peft_dtype)
+    if m == "qgoft":
+        return oft.goft_init(w_pre, True, param_dtype, peft_dtype)
+    raise ValueError(f"unknown PEFT method {m!r}")
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def apply_linear(params: Dict[str, jax.Array], x: jax.Array, cfg: PEFTConfig,
+                 compute_dtype=jnp.bfloat16) -> jax.Array:
+    if "w_res" in params:     # psoft
+        if cfg.use_fused_kernel and x.ndim == 2:
+            from repro.kernels import ops as kops
+            return kops.psoft_matmul(
+                x, params, neumann_terms=cfg.neumann_terms,
+                compute_dtype=compute_dtype)
+        return psoft.psoft_apply(params, x, cfg.neumann_terms,
+                                 cfg.exact_cayley, compute_dtype)
+    if "m" in params:         # dora
+        return lora.dora_apply(params, x, cfg.lora_alpha / cfg.rank,
+                               compute_dtype)
+    if "s" in params:         # lora_xs
+        return lora.lora_xs_apply(params, x, compute_dtype)
+    if "a" in params:         # lora / pissa (pissa uses unit scaling)
+        scale = 1.0 if cfg.method == "pissa" else cfg.lora_alpha / cfg.rank
+        return lora.lora_apply(params, x, scale, compute_dtype)
+    if "out_scale" in params:  # oft / boft
+        if params["q"].ndim == 3:
+            return oft.boft_apply(params, x, cfg.boft_blocks,
+                                  cfg.neumann_terms, compute_dtype)
+        return oft.oft_apply(params, x, cfg.oft_block_size,
+                             cfg.neumann_terms, compute_dtype)
+    if "theta" in params or "g" in params:  # goft / qgoft
+        return oft.goft_apply(params, x, compute_dtype)
+    return x.astype(compute_dtype) @ params["w"].astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# merge (zero-latency serving, paper's reparameterization selling point)
+# ---------------------------------------------------------------------------
+
+def merge_linear(params: Dict[str, jax.Array], cfg: PEFTConfig) -> jax.Array:
+    if "w_res" in params:
+        return psoft.psoft_merge(params, cfg.neumann_terms, cfg.exact_cayley)
+    if "m" in params:
+        return lora.dora_merge(params, cfg.lora_alpha / cfg.rank)
+    if "s" in params:
+        return lora.lora_xs_merge(params)
+    if "a" in params:
+        scale = 1.0 if cfg.method == "pissa" else cfg.lora_alpha / cfg.rank
+        return lora.lora_merge(params, scale)
+    if "out_scale" in params:
+        if params["q"].ndim == 3:
+            return oft.boft_merge(params, cfg.boft_blocks, cfg.neumann_terms)
+        return oft.oft_merge(params, cfg.oft_block_size, cfg.neumann_terms)
+    if "theta" in params or "g" in params:
+        return oft.goft_merge(params)
+    return params["w"]
+
+
+# ---------------------------------------------------------------------------
+# trainability + sharding metadata
+# ---------------------------------------------------------------------------
+
+_TRAINABLE = {
+    "psoft": ("q", "alpha", "beta"),
+    "lora": ("a", "b"),
+    "pissa": ("a", "b"),
+    "dora": ("a", "b", "m"),
+    "lora_xs": ("s",),
+    "oft": ("q", "out_scale"),
+    "boft": ("q", "out_scale"),
+    "goft": ("theta",),
+    "qgoft": ("g",),
+    "none": (),
+}
+
+
+def trainable_names(method: str) -> Tuple[str, ...]:
+    return _TRAINABLE[method]
+
+
+def linear_logical_axes(params_or_names, cfg: PEFTConfig,
+                        in_axis: Optional[str], out_axis: Optional[str],
+                        ) -> Dict[str, Tuple[Optional[str], ...]]:
+    """Logical sharding axes per param of a linear.
+
+    Big (d_in × d_out) tensors shard like the base weight; rank-space tensors
+    shard their *wide* dim like the adjoining weight dim and replicate r.
+    """
+    names = set(params_or_names)
+    ax: Dict[str, Tuple[Optional[str], ...]] = {}
+    for n in names:
+        if n in ("w", "w_res"):
+            ax[n] = (in_axis, out_axis)
+        elif n == "A":
+            ax[n] = (in_axis, "rank")
+        elif n == "B":
+            ax[n] = ("rank", out_axis)
+        elif n == "a":
+            ax[n] = (in_axis, "rank")
+        elif n == "b":
+            ax[n] = ("rank", out_axis)
+        elif n in ("m", "out_scale"):
+            ax[n] = (out_axis,)
+        elif n == "s":
+            ax[n] = ("rank", "rank")
+        elif n == "q":
+            # psoft: flat vec; oft: (blocks, flat); boft: (m, blocks, flat)
+            ax[n] = (None,) * 3  # trimmed below to actual ndim
+        elif n in ("alpha", "beta"):
+            ax[n] = ("rank",)
+        elif n in ("theta", "g"):
+            ax[n] = (None,) * 4
+    return ax
+
+
+# ---------------------------------------------------------------------------
+# parameter counting (Table 8)
+# ---------------------------------------------------------------------------
+
+def count_trainable_params(d_in: int, d_out: int, cfg: PEFTConfig) -> int:
+    m, r = cfg.method, cfg.rank
+    if m == "psoft":
+        return psoft.psoft_num_params(r, cfg.relax_vectors)
+    if m in ("lora", "pissa"):
+        return lora.lora_num_params(d_in, d_out, r)
+    if m == "dora":
+        return lora.dora_num_params(d_in, d_out, r)
+    if m == "lora_xs":
+        return lora.lora_xs_num_params(r)
+    if m == "oft":
+        return oft.oft_num_params(d_in, d_out, cfg.oft_block_size)
+    if m == "boft":
+        return oft.boft_num_params(d_in, d_out, cfg.boft_blocks,
+                                   cfg.boft_factors)
+    if m == "goft":
+        return int(oft.goft_num_params(d_in, False))
+    if m == "qgoft":
+        return int(oft.goft_num_params(d_in, True))
+    if m == "none":
+        return 0
+    raise ValueError(m)
+
+
+# ---------------------------------------------------------------------------
+# whole-model merge (zero-latency serving)
+# ---------------------------------------------------------------------------
+
+_LINEAR_MARKERS = ("w_res", "a", "s", "out_scale", "theta", "g")
+
+
+def is_peft_linear(node) -> bool:
+    return isinstance(node, dict) and any(k in node for k in _LINEAR_MARKERS)
+
+
+def merge_tree(params, cfg: PEFTConfig):
+    """Recursively collapse every PEFT linear into a plain {"w": W_final}.
+
+    Handles stacked (layer/expert) linears by vmapping the merge over leading
+    axes.
+    """
+    def rec(node):
+        if is_peft_linear(node):
+            ref = node["w_res"] if "w_res" in node else node["w"]
+            extra = ref.ndim - 2
+            fn = lambda p: {"w": merge_linear(p, cfg)}
+            for _ in range(extra):
+                fn = jax.vmap(fn)
+            return fn(node)
+        if isinstance(node, dict):
+            return {k: rec(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [rec(v) for v in node]
+        return node
+    return rec(params)

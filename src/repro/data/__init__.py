@@ -1,0 +1,3 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig, SyntheticLMDataset, make_input_specs, prefetch_iterator,
+)

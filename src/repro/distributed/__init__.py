@@ -1,0 +1,1 @@
+from repro.distributed.pipeline import gpipe_spmd_pipeline  # noqa: F401

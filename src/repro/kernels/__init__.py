@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the PSOFT hot-spots (fused subspace matmul,
+# on-chip Cayley-Neumann series, block-diagonal OFT rotation baseline).
+# Validated against ref.py oracles with interpret=True on CPU.
+from repro.kernels import ops, ref  # noqa: F401

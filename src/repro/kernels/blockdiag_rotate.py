@@ -1,0 +1,57 @@
+"""Block-diagonal input rotation Pallas kernel (OFTv2 baseline hot-spot).
+
+y[m, g·b:(g+1)·b] = x[m, g·b:(g+1)·b] @ R_g   for each block g.
+
+Grid over (M/bm, d/blocks_per_tile); each step rotates a (bm × b·gpt) slab
+with its (gpt, b, b) rotations held in VMEM.  The einsum maps to gpt small
+MXU matmuls per tile — the baseline this paper's PSOFT kernel is compared
+against in the kernel benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, rot_ref, o_ref):
+    x = x_ref[...]                       # (bm, gpt*b)
+    rots = rot_ref[...]                  # (gpt, b, b)
+    gpt, b, _ = rots.shape
+    xb = x.reshape(x.shape[0], gpt, b)
+    y = jax.lax.dot_general(
+        xb.astype(jnp.float32), rots.astype(jnp.float32),
+        dimension_numbers=(((2,), (1,)), ((1,), (0,))),
+        preferred_element_type=jnp.float32)      # (gpt, bm, b)
+    y = jnp.moveaxis(y, 0, 1).reshape(x.shape)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "groups_per_tile",
+                                             "interpret"))
+def blockdiag_rotate_pallas(x: jax.Array, rots: jax.Array, bm: int = 256,
+                            groups_per_tile: int = 0,
+                            interpret: bool = False) -> jax.Array:
+    """x: (M, d); rots: (d/b, b, b)."""
+    m, d = x.shape
+    nb, b, _ = rots.shape
+    assert nb * b == d
+    bm = min(bm, m)
+    gpt = groups_per_tile or max(1, min(nb, 512 // b))
+    while nb % gpt:
+        gpt -= 1
+    assert m % bm == 0
+    grid = (m // bm, nb // gpt)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, gpt * b), lambda i, j: (i, j)),
+            pl.BlockSpec((gpt, b, b), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, gpt * b), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=interpret,
+    )(x, rots)

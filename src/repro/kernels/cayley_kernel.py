@@ -1,0 +1,43 @@
+"""Cayley–Neumann Pallas kernel: R = (I − Q)·Σ_{k≤K}(−Q)^k entirely in VMEM.
+
+The whole r×r series (r ≤ 512 → ≤ 1 MB fp32) stays on-chip: K Horner
+iterations of r×r MXU matmuls with no HBM traffic between terms, vs K+1
+separate XLA dots each reading/writing HBM.  Single-block grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, o_ref, s_ref, *, terms: int):
+    q = q_ref[...].astype(jnp.float32)
+    r = q.shape[0]
+    eye = jnp.eye(r, dtype=jnp.float32)
+    s_ref[...] = eye
+    for _ in range(terms):   # static unroll: K is small (≤ 8)
+        s_ref[...] = eye - jnp.dot(q, s_ref[...],
+                                   preferred_element_type=jnp.float32)
+    o_ref[...] = (s_ref[...] - jnp.dot(q, s_ref[...],
+                                       preferred_element_type=jnp.float32)
+                  ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("terms", "interpret"))
+def cayley_neumann_pallas(q: jax.Array, terms: int = 5,
+                          interpret: bool = False) -> jax.Array:
+    """q: dense skew-symmetric (r, r), fp32. Returns R (r, r) fp32."""
+    r = q.shape[-1]
+    return pl.pallas_call(
+        functools.partial(_kernel, terms=terms),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((r, r), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((r, r), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, r), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((r, r), jnp.float32)],
+        interpret=interpret,
+    )(q.astype(jnp.float32))

@@ -1,0 +1,84 @@
+"""Fused PSOFT matmul Pallas kernel (TPU target).
+
+Computes  y = x @ (W_res + A·diag(α)·R·diag(β)·B)  in ONE pass over the
+residual weight: while (bm × bk)·(bk × bn) W_res tiles stream HBM→VMEM and
+accumulate on the MXU, the kernel simultaneously accumulates the rank-r
+projection u = x@A (bm × r, VMEM-resident — r ≤ 512), and on the final k-step
+applies the subspace rotation and adds ((u⊙α)R⊙β)·B_tile into the output
+tile.  The low-rank path therefore costs ZERO extra HBM traffic for x (shared
+tile reads) and hides under the W_res stream — on GPU this is 5 separate
+GEMM launches with HBM round-trips between them (see DESIGN.md §3).
+
+Grid: (M/bm, N/bn, K/bk), k innermost.  fp32 accumulation scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, wres_ref, a_ref, rot_ref, alpha_ref, beta_ref, b_ref,
+            o_ref, yacc_ref, uacc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        yacc_ref[...] = jnp.zeros_like(yacc_ref)
+        uacc_ref[...] = jnp.zeros_like(uacc_ref)
+
+    x_blk = x_ref[...]
+    yacc_ref[...] += jnp.dot(x_blk, wres_ref[...],
+                             preferred_element_type=jnp.float32)
+    uacc_ref[...] += jnp.dot(x_blk, a_ref[...],
+                             preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        u = uacc_ref[...] * alpha_ref[...]              # (bm, r) ⊙ (1, r)
+        u = jnp.dot(u, rot_ref[...], preferred_element_type=jnp.float32)
+        u = u * beta_ref[...]
+        y = yacc_ref[...] + jnp.dot(u, b_ref[...].astype(jnp.float32),
+                                    preferred_element_type=jnp.float32)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def psoft_matmul_pallas(x, w_res, a, rot, b, alpha, beta,
+                        bm: int = 128, bn: int = 128, bk: int = 512,
+                        interpret: bool = False):
+    """x: (M,K); w_res: (K,N); a: (K,r); rot: (r,r); b: (r,N); α/β: (r,)."""
+    m, kdim = x.shape
+    n = w_res.shape[1]
+    r = a.shape[1]
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (
+        f"shape ({m},{kdim},{n}) not divisible by blocks ({bm},{bk},{bn})")
+    nk = kdim // bk
+    grid = (m // bm, n // bn, nk)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),    # x
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),    # w_res
+            pl.BlockSpec((bk, r), lambda i, j, k: (k, 0)),     # A
+            pl.BlockSpec((r, r), lambda i, j, k: (0, 0)),      # R
+            pl.BlockSpec((1, r), lambda i, j, k: (0, 0)),      # alpha
+            pl.BlockSpec((1, r), lambda i, j, k: (0, 0)),      # beta
+            pl.BlockSpec((r, bn), lambda i, j, k: (0, j)),     # B
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),   # y accumulator
+            pltpu.VMEM((bm, r), jnp.float32),    # u = x@A accumulator
+        ],
+        interpret=interpret,
+    )(x, w_res, a, rot.astype(jnp.float32),
+      alpha.reshape(1, r).astype(jnp.float32),
+      beta.reshape(1, r).astype(jnp.float32), b)

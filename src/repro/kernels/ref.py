@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def psoft_matmul_ref(x, w_res, a, rot, b, alpha=None, beta=None,
+                     out_dtype=None):
+    """y = x @ (W_res + A diag(α) R diag(β) B) — fp32 accumulate."""
+    out_dtype = out_dtype or x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 @ w_res.astype(jnp.float32)
+    u = x32 @ a.astype(jnp.float32)
+    if alpha is not None:
+        u = u * alpha.astype(jnp.float32)
+    u = u @ rot.astype(jnp.float32)
+    if beta is not None:
+        u = u * beta.astype(jnp.float32)
+    y = y + u @ b.astype(jnp.float32)
+    return y.astype(out_dtype)
+
+
+def cayley_neumann_ref(q: jax.Array, terms: int) -> jax.Array:
+    """R = (I − Q) Σ_{k=0}^{K}(−Q)^k for dense skew-symmetric Q (r×r)."""
+    r = q.shape[-1]
+    eye = jnp.eye(r, dtype=jnp.float32)
+    q = q.astype(jnp.float32)
+    s = eye
+    for _ in range(terms):
+        s = eye - q @ s
+    return (eye - q) @ s
+
+
+def blockdiag_rotate_ref(x: jax.Array, rots: jax.Array) -> jax.Array:
+    """x: (M, d); rots: (d/b, b, b) — per-block input rotation (OFTv2)."""
+    m, d = x.shape
+    nb, bs, _ = rots.shape
+    xb = x.reshape(m, nb, bs)
+    y = jnp.einsum("mgb,gbc->mgc", xb.astype(jnp.float32),
+                   rots.astype(jnp.float32))
+    return y.reshape(m, d).astype(x.dtype)

@@ -1,0 +1,384 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell with
+512 placeholder host devices, record memory/cost analysis + collective bytes.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape train_4k [--multi-pod] [--full-ft] [--all] [--out DIR]
+
+Results are cached as JSON under experiments/dryrun/ so reruns are
+incremental; roofline.py consumes them.
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    ASSIGNED_ARCHS, LM_SHAPES, TrainConfig, get_config, shape_applicable)
+from repro.data import make_input_specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh, rules_for  # noqa: E402
+from repro.models import model as model_lib  # noqa: E402
+from repro.sharding import mesh_context, named_sharding  # noqa: E402
+from repro.train import trainer  # noqa: E402
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
+               "s64": 8, "u64": 8, "s8": 1, "u8": 1, "pred": 1, "s16": 2,
+               "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(txt):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, bytes} from post-SPMD HLO (result shapes)."""
+    out: Dict[str, Dict[str, float]] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        shape_txt, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_txt)
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += b
+    return out
+
+
+def batch_shardings(specs: Dict, mesh, rules):
+    def mk(v):
+        ndim = len(v.shape)
+        axes = ("batch",) + (None,) * (ndim - 1)
+        return named_sharding(mesh, rules, axes, v.shape)
+    return {k: mk(v) for k, v in specs.items()}
+
+
+def _lower_cell(cfg, shape, mesh, rules, full_ft: bool):
+    """Build + lower the cell's step function; returns the jax Lowered."""
+    t0 = time.time()
+    with mesh, mesh_context(mesh, rules):
+        if shape.kind == "train":
+            tc = TrainConfig(steps=1000, full_finetune=full_ft,
+                             microbatches=1)
+            state_sh, state_abs = trainer.state_shardings(cfg, tc, mesh,
+                                                          rules)
+            specs = make_input_specs(cfg, shape)
+            bsh = batch_shardings(specs, mesh, rules)
+            step = trainer.make_train_step(cfg, tc, moe_impl="capacity")
+            jitted = jax.jit(step, in_shardings=(state_sh, bsh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_abs, specs)
+        elif shape.kind == "prefill":
+            scfg = cfg.replace(peft=cfg.peft.replace(method="none"))
+            params_abs = model_lib.abstract_params(scfg)
+            axes = model_lib.param_axes(scfg, params_abs)
+            psh = jax.tree.map(
+                lambda l, a: named_sharding(mesh, rules, tuple(a), l.shape),
+                params_abs, axes)
+            specs = make_input_specs(scfg, shape)
+            bsh = batch_shardings(specs, mesh, rules)
+            max_len = (shape.seq_len // 2 if scfg.is_encoder_decoder
+                       else shape.seq_len)
+
+            def prefill_fn(p, b):
+                return model_lib.prefill(p, b, scfg, max_len,
+                                         moe_impl="capacity")
+            jitted = jax.jit(prefill_fn, in_shardings=(psh, bsh))
+            lowered = jitted.lower(params_abs, specs)
+        else:  # decode
+            scfg = cfg.replace(peft=cfg.peft.replace(method="none"))
+            params_abs = model_lib.abstract_params(scfg)
+            axes = model_lib.param_axes(scfg, params_abs)
+            psh = jax.tree.map(
+                lambda l, a: named_sharding(mesh, rules, tuple(a), l.shape),
+                params_abs, axes)
+            b = shape.global_batch
+            cache_len = (shape.seq_len // 2 if scfg.is_encoder_decoder
+                         else shape.seq_len)
+            cache_abs = jax.eval_shape(
+                lambda: model_lib.init_cache(scfg, b, cache_len))
+            if scfg.family == "audio":
+                # cross cache comes from prefill; build its abstract shape
+                kh, hd = scfg.num_kv_heads, scfg.resolved_head_dim
+                cross = {
+                    "k": jax.ShapeDtypeStruct(
+                        (scfg.num_layers, b, cache_len, kh, hd),
+                        jnp.bfloat16),
+                    "v": jax.ShapeDtypeStruct(
+                        (scfg.num_layers, b, cache_len, kh, hd),
+                        jnp.bfloat16),
+                    "len": jax.ShapeDtypeStruct((), jnp.int32)}
+                cache_abs = {"self": cache_abs["self"], "cross": cross}
+            caxes = model_lib.cache_axes(scfg, cache_abs)
+            csh = jax.tree.map(
+                lambda l, a: named_sharding(mesh, rules, tuple(a), l.shape),
+                cache_abs, caxes)
+            specs = make_input_specs(scfg, shape)
+            bsh = batch_shardings(specs, mesh, rules)
+            pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+            def serve_step(p, b_, c, pos):
+                return model_lib.decode_step(p, b_, c, pos, scfg,
+                                             moe_impl="capacity")
+            jitted = jax.jit(serve_step,
+                             in_shardings=(psh, bsh, csh, None),
+                             out_shardings=(None, csh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_abs, specs, cache_abs, pos_abs)
+    return lowered, time.time() - t0
+
+
+def _analyze(compiled) -> Dict:
+    out: Dict = {}
+    mem = compiled.memory_analysis()
+    out["memory"] = {
+        "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "generated_code_bytes": int(
+            getattr(mem, "generated_code_size_in_bytes", 0)),
+    }
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    out["cost"] = {k: float(v) for k, v in cost.items()
+                   if isinstance(v, (int, float)) and (
+                       k in ("flops", "bytes accessed", "transcendentals")
+                       or k.startswith("bytes accessed"))}
+    hlo = compiled.as_text()
+    out["collectives"] = collective_stats(hlo)
+    out["hlo_lines"] = hlo.count("\n")
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             full_ft: bool = False, rules_override: Optional[dict] = None,
+             tag: str = "", cfg_override: Optional[dict] = None) -> Dict:
+    """Dual lowering per cell:
+
+    1. ``scan``    — production config (lax.scan over layers): its
+       memory_analysis is the real per-device footprint (scan enforces
+       sequential layer scheduling).
+    2. ``unrolled``— layers + loss chunks as python loops: exact
+       cost_analysis FLOPs/bytes and per-layer collective counts (XLA's
+       HloCostAnalysis counts while bodies once, so scan under-reports).
+    """
+    shape = LM_SHAPES[shape_name]
+    cfg0 = get_config(arch, **(cfg_override or {}))
+    rec: Dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "full_ft": full_ft, "tag": tag}
+    ok, reason = shape_applicable(cfg0, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(cfg0, mesh, shape.kind)
+    if rules_override:
+        rules = rules.with_overrides(**rules_override)
+    rec["rules_override"] = rules_override or {}
+
+    lowered, lower_s = _lower_cell(cfg0, shape, mesh, rules, full_ft)
+    t0 = time.time()
+    compiled = lowered.compile()
+    info = _analyze(compiled)
+    info["lower_s"] = round(lower_s, 1)
+    info["compile_s"] = round(time.time() - t0, 1)
+    rec["scan"] = info
+    del compiled, lowered
+    rec["memory"] = rec["scan"]["memory"]
+    rec["compile_s"] = rec["scan"]["compile_s"]
+    if not multi_pod:
+        # single-pod cells feed the roofline table -> add exact per-layer
+        # cost via depth extrapolation (unrolling the full stack would take
+        # tens of minutes per cell; 1-vs-2-layer unrolled compiles pin the
+        # per-layer cost exactly for homogeneous stacks, collectives incl.)
+        extr = _extrapolated_cost(cfg0, shape, mesh, rules, full_ft)
+        rec["extrapolated"] = extr
+        rec["cost"] = extr["cost"]
+        rec["collectives"] = extr["collectives"]
+        rec["compile_s"] += extr["compile_s"]
+    else:
+        rec["cost"] = rec["scan"]["cost"]
+        rec["collectives"] = rec["scan"]["collectives"]
+    rec["status"] = "ok"
+    return rec
+
+
+def _measure_depth(cfg, shape, mesh, rules, full_ft):
+    lowered, _ = _lower_cell(cfg, shape, mesh, rules, full_ft)
+    compiled = lowered.compile()
+    info = _analyze(compiled)
+    del compiled, lowered
+    return info
+
+
+def _lin_comb(base: Dict, delta: Dict, n: float) -> Dict:
+    """base + n*delta for nested {str: number|dict} structures."""
+    keys = set(base) | set(delta)
+    out = {}
+    for k in keys:
+        b, d = base.get(k, 0), delta.get(k, 0)
+        if isinstance(b, dict) or isinstance(d, dict):
+            out[k] = _lin_comb(b if isinstance(b, dict) else {},
+                               d if isinstance(d, dict) else {}, n)
+        else:
+            out[k] = float(b) + n * float(d)
+    return out
+
+
+def _diff(a: Dict, b: Dict) -> Dict:
+    return _lin_comb(a, _lin_comb({}, b, -1.0), 1.0)
+
+
+def _extrapolated_cost(cfg0, shape, mesh, rules, full_ft) -> Dict:
+    t0 = time.time()
+
+    def mk(n_layers, n_enc=None):
+        cfg = cfg0.replace(num_layers=n_layers, scan_layers=False,
+                           unroll_loops=True)
+        if n_enc is not None:
+            cfg = cfg.replace(num_encoder_layers=n_enc)
+        return cfg
+
+    def pack(info):
+        return {"cost": info["cost"], "collectives": info["collectives"]}
+
+    big_l = cfg0.num_layers
+    if cfg0.family == "hybrid":
+        k = cfg0.hybrid_attn_every
+        m1 = pack(_measure_depth(mk(1), shape, mesh, rules, full_ft))
+        m2 = pack(_measure_depth(mk(2), shape, mesh, rules, full_ft))
+        mk_cost = _diff(m2, m1)                       # one M layer
+        mka = pack(_measure_depth(mk(k), shape, mesh, rules, full_ft))
+        # cost(k) = base + (k-1)*M + 1*A  ->  A = cost(k) - m1 - (k-2)*M
+        a_cost = _diff(_diff(mka, m1), _lin_comb({}, mk_cost, k - 2))
+        pattern = cfg0.layer_pattern()
+        n_m, n_a = pattern.count("M"), pattern.count("A")
+        base = _diff(m1, mk_cost)                     # zero-layer base
+        total = _lin_comb(_lin_comb(base, mk_cost, n_m), {}, 0)
+        total = _lin_comb(total, a_cost, n_a)
+        pts = 3
+    elif cfg0.is_encoder_decoder:
+        m11 = pack(_measure_depth(mk(1, 1), shape, mesh, rules, full_ft))
+        m21 = pack(_measure_depth(mk(2, 1), shape, mesh, rules, full_ft))
+        m12 = pack(_measure_depth(mk(1, 2), shape, mesh, rules, full_ft))
+        dec = _diff(m21, m11)
+        enc = _diff(m12, m11)
+        base = _diff(_diff(m11, dec), enc)
+        total = _lin_comb(base, dec, cfg0.num_layers)
+        total = _lin_comb(total, enc, cfg0.num_encoder_layers)
+        pts = 3
+    else:
+        m1 = pack(_measure_depth(mk(1), shape, mesh, rules, full_ft))
+        m2 = pack(_measure_depth(mk(2), shape, mesh, rules, full_ft))
+        per = _diff(m2, m1)
+        total = _lin_comb(m1, per, big_l - 1)
+        pts = 2
+    total["compile_s"] = round(time.time() - t0, 1)
+    total["method"] = f"depth-extrapolation({pts}pt, unrolled)"
+    # round collective counts back to ints
+    for kind, v in total.get("collectives", {}).items():
+        v["count"] = int(round(v["count"]))
+        v["bytes"] = int(round(v["bytes"]))
+    return total
+
+
+def cell_path(out_dir: str, rec: Dict) -> str:
+    tag = f"_{rec['tag']}" if rec.get("tag") else ""
+    ft = "_fullft" if rec.get("full_ft") else ""
+    return os.path.join(
+        out_dir, f"{rec['arch']}_{rec['shape']}_{rec['mesh']}{ft}{tag}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--full-ft", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--rules", default="",
+                    help="JSON dict of rule overrides, e.g. "
+                         "'{\"cache_seq\": \"model\"}'")
+    ap.add_argument("--cfg", default="",
+                    help="JSON dict of ModelConfig overrides, e.g. "
+                         "'{\"remat_policy\": \"none\"}'")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cells = []
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(LM_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) else \
+        [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    overrides = json.loads(args.rules) if args.rules else None
+    cfg_over = json.loads(args.cfg) if args.cfg else None
+    n_ok = n_skip = n_fail = 0
+    for arch, shape_name, mp in cells:
+        probe = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if mp else "16x16",
+                 "full_ft": args.full_ft, "tag": args.tag}
+        path = cell_path(args.out, probe)
+        if os.path.exists(path) and not args.force:
+            print(f"[cached] {path}")
+            continue
+        print(f"[dryrun] {arch} × {shape_name} × "
+              f"{'2x16x16' if mp else '16x16'} ...", flush=True)
+        try:
+            rec = run_cell(arch, shape_name, mp, args.full_ft, overrides,
+                           args.tag, cfg_over)
+        except Exception as e:  # noqa: BLE001
+            rec = {**probe, "status": "error", "error": repr(e),
+                   "traceback": traceback.format_exc()[-4000:]}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        st = rec["status"]
+        n_ok += st == "ok"
+        n_skip += st == "skipped"
+        n_fail += st == "error"
+        extra = ""
+        if st == "ok":
+            tb = rec["memory"]["temp_bytes"] / 2**30
+            fl = rec["cost"].get("flops", 0)
+            extra = (f" compile={rec['compile_s']}s temp={tb:.2f}GiB "
+                     f"flops/dev={fl:.3g}")
+        if st == "error":
+            extra = " " + rec["error"][:160]
+        print(f"  -> {st}{extra}", flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} failed={n_fail}")
+
+
+if __name__ == "__main__":
+    main()

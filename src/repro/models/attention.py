@@ -1,0 +1,119 @@
+"""GQA attention: chunked (flash-style online-softmax) training/prefill path,
+and a KV-cache single-token decode path.
+
+The chunked path never materializes the (S × S) score matrix — mandatory at
+the assigned shapes (train_4k would otherwise need ~400 TB of scores for
+starcoder2).  On TPU the same blocking maps to the Pallas flash kernel; the
+pure-JAX scan version here is the lowering used by the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard_act
+
+NEG_INF = -1e30
+
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(*x.shape[:-1], n_heads, head_dim)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True,
+                      q_chunk: int = 1024, kv_chunk: int = 1024,
+                      q_offset: int = 0, expand_kv: bool = False) -> jax.Array:
+    """Online-softmax attention.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KH, D) with H % KH == 0.
+    Returns (B, Sq, H, D).  fp32 accumulation.
+
+    ``expand_kv``: repeat K/V to the full H heads first.  Used when KH is not
+    divisible by the tensor-parallel axis: K/V stay replicated either way
+    (they're small), but the (…,H,…) score tensors then shard cleanly over
+    the model axis instead of replicating — a TPU-sharding adaptation with no
+    GPU analogue in the paper (DESIGN.md §3).
+    """
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    if expand_kv and kh != h:
+        rep = h // kh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        kh = h
+    g = h // kh
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    qg = q.reshape(b, nq, q_chunk, kh, g, d)
+    kg = k.reshape(b, nk, kv_chunk, kh, d)
+    vg = v.reshape(b, nk, kv_chunk, kh, d)
+
+    def q_block(qi, q_blk):
+        # carry: (acc, row_max, row_sum)
+        acc0 = jnp.zeros((b, q_chunk, kh, g, d), jnp.float32)
+        m0 = jnp.full((b, q_chunk, kh, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, q_chunk, kh, g), jnp.float32)
+
+        def kv_block(carry, inp):
+            acc, m, l = carry
+            ki, k_blk, v_blk = inp
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            if causal:
+                qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p, v_blk.astype(jnp.float32))
+            return (acc_new, m_new, l_new), None
+
+        ks = jnp.arange(nk)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_block, (acc0, m0, l0),
+            (ks, jnp.moveaxis(kg, 1, 0), jnp.moveaxis(vg, 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out
+
+    outs = jax.lax.map(lambda args: q_block(*args),
+                       (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len, expand_kv: bool = False) -> jax.Array:
+    """One-token attention over a KV cache.
+
+    q: (B, 1, H, D); caches: (B, S, KH, D); cache_len: () or (B,) valid length.
+    """
+    b, _, h, d = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    if expand_kv and kh != h:
+        rep = h // kh
+        k_cache = jnp.repeat(k_cache, rep, axis=2)
+        v_cache = jnp.repeat(v_cache, rep, axis=2)
+        kh = h
+    g = h // kh
+    qg = q.reshape(b, kh, g, d)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.asarray(cache_len).reshape(-1, 1)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,928 @@
+"""Model assembly: dense / MoE / SSM / hybrid / VLM / enc-dec families from one
+config, with scan-over-layers, configurable remat, PEFT-wrapped linears, and
+train / prefill / decode entry points.
+
+Params are plain nested dicts.  ``param_axes`` produces a parallel tree of
+logical sharding axes (path-pattern based), and ``trainable_mask`` the PEFT
+trainability tree — single sources of truth for the distributed runtime.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import peft as peft_lib
+from repro.models import attention, layers, moe as moe_lib, ssm as ssm_lib
+from repro.sharding import current_rules, shard_act
+
+PyTree = Any
+
+
+def _expand_kv_flag(cfg: "ModelConfig") -> bool:
+    """Expand KV to full heads when kv_heads don't divide the TP axis, so the
+    score tensors shard over 'model' instead of replicating (see
+    attention.chunked_attention docstring)."""
+    ctx = current_rules()
+    if ctx is None:
+        return False
+    mesh, _ = ctx
+    tp = dict(mesh.shape).get("model", 1)
+    return tp > 1 and cfg.num_kv_heads % tp != 0 and cfg.num_heads % tp == 0
+
+
+def _dt(name):
+    return getattr(jnp, name) if isinstance(name, str) else name
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None,
+             param_dtype=None, peft_dtype=None,
+             targets: Optional[Tuple[str, ...]] = None) -> Dict:
+    param_dtype = param_dtype or _dt(cfg.param_dtype)
+    peft_dtype = peft_dtype or _dt(cfg.peft_dtype)
+    targets = cfg.peft.target_modules if targets is None else targets
+    f = d_ff or cfg.d_ff
+    d = cfg.d_model
+    keys = jax.random.split(key, 6)
+    gated = cfg.mlp_type == "swiglu"
+
+    def lin(k1, k2, d_in, d_out, name):
+        w = layers.truncated_normal_init(k1, (d_in, d_out), jnp.float32)
+        return peft_lib.init_linear(k2, w, cfg.peft, name in targets,
+                                    param_dtype, peft_dtype)
+
+    p = {"up": lin(keys[0], keys[1], d, f, "up"),
+         "down": lin(keys[2], keys[3], f, d, "down")}
+    if gated:
+        p["gate"] = lin(keys[4], keys[5], d, f, "gate")
+    return p
+
+
+def mlp_apply(params: Dict, x: jax.Array, cfg: ModelConfig,
+              compute_dtype) -> jax.Array:
+    act = layers.mlp_activation(cfg.mlp_type)
+    up = peft_lib.apply_linear(params["up"], x, cfg.peft, compute_dtype)
+    if "gate" in params:
+        g = peft_lib.apply_linear(params["gate"], x, cfg.peft, compute_dtype)
+        h = act(g.astype(jnp.float32)).astype(compute_dtype) * up
+    else:
+        h = act(up.astype(jnp.float32)).astype(compute_dtype)
+    h = shard_act(h, ("batch", "seq", "mlp"))
+    return peft_lib.apply_linear(params["down"], h, cfg.peft, compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention module
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, d_in: Optional[int] = None,
+              cross: bool = False) -> Dict:
+    param_dtype, peft_dtype = _dt(cfg.param_dtype), _dt(cfg.peft_dtype)
+    targets = cfg.peft.target_modules
+    d = d_in or cfg.d_model
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    keys = jax.random.split(key, 8)
+
+    def lin(k1, k2, di, do, name):
+        w = layers.truncated_normal_init(k1, (di, do), jnp.float32)
+        return peft_lib.init_linear(k2, w, cfg.peft, name in targets,
+                                    param_dtype, peft_dtype)
+
+    return {
+        "q": lin(keys[0], keys[1], d, h * hd, "q"),
+        "k": lin(keys[2], keys[3], cfg.d_model if cross else d, kh * hd, "k"),
+        "v": lin(keys[4], keys[5], cfg.d_model if cross else d, kh * hd, "v"),
+        "o": lin(keys[6], keys[7], h * hd, cfg.d_model, "o"),
+    }
+
+
+def attn_qkv(params, x, cfg: ModelConfig, compute_dtype, kv_input=None,
+             positions=None, use_rope=True):
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    kv_in = x if kv_input is None else kv_input
+    q = peft_lib.apply_linear(params["q"], x, cfg.peft, compute_dtype)
+    k = peft_lib.apply_linear(params["k"], kv_in, cfg.peft, compute_dtype)
+    v = peft_lib.apply_linear(params["v"], kv_in, cfg.peft, compute_dtype)
+    q = q.reshape(*x.shape[:-1], h, hd)
+    k = k.reshape(*kv_in.shape[:-1], kh, hd)
+    v = v.reshape(*kv_in.shape[:-1], kh, hd)
+    if use_rope and positions is not None:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        kpos = positions if kv_input is None else jnp.arange(kv_in.shape[-2])
+        k = layers.apply_rope(k, jnp.broadcast_to(kpos, kv_in.shape[:-1]),
+                              cfg.rope_theta)
+    q = shard_act(q, ("batch", "seq", "heads", None))
+    k = shard_act(k, ("batch", "seq", "kv_heads", None))
+    v = shard_act(v, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def attn_apply(params, x, cfg: ModelConfig, compute_dtype, causal=True,
+               kv_input=None, positions=None, use_rope=True,
+               cache: Optional[Dict] = None):
+    """Full-sequence attention; optionally writes a KV cache (prefill)."""
+    if positions is None:
+        positions = jnp.arange(x.shape[-2])[None, :]
+    q, k, v = attn_qkv(params, x, cfg, compute_dtype, kv_input, positions,
+                       use_rope)
+    new_cache = None
+    if cache is not None:
+        s_max = cache["k"].shape[1]
+        kp = jnp.pad(k, ((0, 0), (0, s_max - k.shape[1]), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, s_max - v.shape[1]), (0, 0), (0, 0)))
+        new_cache = {"k": kp.astype(cache["k"].dtype),
+                     "v": vp.astype(cache["v"].dtype)}
+    out = attention.chunked_attention(q, k, v, causal=causal,
+                                      expand_kv=_expand_kv_flag(cfg))
+    out = out.reshape(*x.shape[:-1], -1)
+    y = peft_lib.apply_linear(params["o"], out, cfg.peft, compute_dtype)
+    return (y, new_cache) if cache is not None else y
+
+
+def attn_decode(params, x_t, cache: Dict, pos, cfg: ModelConfig,
+                compute_dtype, use_rope=True, cross_cache: Optional[Dict] = None):
+    """One-token decode. x_t: (B,1,D); cache k/v: (B,S,KH,hd)."""
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    b = x_t.shape[0]
+    if cross_cache is not None:
+        q = peft_lib.apply_linear(params["q"], x_t, cfg.peft, compute_dtype)
+        q = q.reshape(b, 1, h, hd)
+        out = attention.decode_attention(q, cross_cache["k"],
+                                         cross_cache["v"],
+                                         cross_cache["len"],
+                                         expand_kv=_expand_kv_flag(cfg))
+        out = out.reshape(b, 1, -1)
+        return peft_lib.apply_linear(params["o"], out, cfg.peft,
+                                     compute_dtype), cache
+    q = peft_lib.apply_linear(params["q"], x_t, cfg.peft, compute_dtype)
+    k = peft_lib.apply_linear(params["k"], x_t, cfg.peft, compute_dtype)
+    v = peft_lib.apply_linear(params["v"], x_t, cfg.peft, compute_dtype)
+    q = q.reshape(b, 1, h, hd)
+    k = k.reshape(b, 1, kh, hd)
+    v = v.reshape(b, 1, kh, hd)
+    if use_rope:
+        posv = jnp.full((b, 1), pos)
+        q = layers.apply_rope(q, posv, cfg.rope_theta)
+        k = layers.apply_rope(k, posv, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+    out = attention.decode_attention(q, k_cache, v_cache, pos + 1,
+                                     expand_kv=_expand_kv_flag(cfg))
+    out = out.reshape(b, 1, -1)
+    y = peft_lib.apply_linear(params["o"], out, cfg.peft, compute_dtype)
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# transformer block (dense or MoE)
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, cross: bool = False) -> Dict:
+    param_dtype = _dt(cfg.param_dtype)
+    keys = jax.random.split(key, 4)
+    p = {
+        "ln1": layers.norm_init(cfg.d_model, cfg.norm_type, param_dtype),
+        "attn": attn_init(keys[0], cfg),
+        "ln2": layers.norm_init(cfg.d_model, cfg.norm_type, param_dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_lib.moe_init(keys[1], cfg, param_dtype,
+                                    _dt(cfg.peft_dtype),
+                                    cfg.peft.target_modules)
+    else:
+        p["mlp"] = mlp_init(keys[1], cfg)
+    if cross:
+        p["ln_cross"] = layers.norm_init(cfg.d_model, cfg.norm_type,
+                                         param_dtype)
+        p["cross"] = attn_init(keys[2], cfg, cross=True)
+    return p
+
+
+def block_apply(params, x, cfg: ModelConfig, compute_dtype, causal=True,
+                enc_out=None, positions=None, use_rope=True,
+                cache: Optional[Dict] = None, moe_impl: str = "capacity"):
+    """Returns (y, aux_loss, new_cache)."""
+    h = layers.apply_norm(params["ln1"], x)
+    if cache is not None:
+        a, new_cache = attn_apply(params["attn"], h, cfg, compute_dtype,
+                                  causal, None, positions, use_rope,
+                                  cache=cache)
+    else:
+        a = attn_apply(params["attn"], h, cfg, compute_dtype, causal, None,
+                       positions, use_rope)
+        new_cache = None
+    x = x + a
+    if enc_out is not None:
+        hc = layers.apply_norm(params["ln_cross"], x)
+        x = x + attn_apply(params["cross"], hc, cfg, compute_dtype,
+                           causal=False, kv_input=enc_out, use_rope=False)
+    h = layers.apply_norm(params["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in params:
+        m, aux = moe_lib.moe_apply(params["moe"], h, cfg, compute_dtype,
+                                   moe_impl)
+    else:
+        m = mlp_apply(params["mlp"], h, cfg, compute_dtype)
+    # "seq_sp": Megatron-style sequence parallelism for the residual stream —
+    # the per-layer saved activation shards over "model" when enabled
+    # (rules override), while attention/MLP internals keep head/mlp TP
+    x = shard_act(x + m, ("batch", "seq_sp", "embed"))
+    return x, aux, new_cache
+
+
+def block_decode(params, x_t, cache, pos, cfg: ModelConfig, compute_dtype,
+                 use_rope=True, cross_cache=None, moe_impl="dense"):
+    h = layers.apply_norm(params["ln1"], x_t)
+    a, new_cache = attn_decode(params["attn"], h, cache, pos, cfg,
+                               compute_dtype, use_rope)
+    x_t = x_t + a
+    if cross_cache is not None:
+        hc = layers.apply_norm(params["ln_cross"], x_t)
+        c, _ = attn_decode(params["cross"], hc, None, pos, cfg, compute_dtype,
+                           use_rope=False, cross_cache=cross_cache)
+        x_t = x_t + c
+    h = layers.apply_norm(params["ln2"], x_t)
+    if "moe" in params:
+        m, _ = moe_lib.moe_apply(params["moe"], h, cfg, compute_dtype,
+                                 moe_impl)
+    else:
+        m = mlp_apply(params["mlp"], h, cfg, compute_dtype)
+    return x_t + m, new_cache
+
+
+# ---------------------------------------------------------------------------
+# hybrid (zamba2-style) shared attention block
+# ---------------------------------------------------------------------------
+
+def shared_block_init(key, cfg: ModelConfig) -> Dict:
+    """One attention+MLP block whose weights are SHARED across all A-layers;
+    input is concat(hidden, initial_embedding) fused down to d_model."""
+    param_dtype, peft_dtype = _dt(cfg.param_dtype), _dt(cfg.peft_dtype)
+    keys = jax.random.split(key, 3)
+    w = layers.truncated_normal_init(keys[0], (2 * cfg.d_model, cfg.d_model),
+                                     jnp.float32)
+    return {
+        "fuse": peft_lib.init_linear(keys[1], w, cfg.peft, False, param_dtype,
+                                     peft_dtype),
+        "block": block_init(keys[2], cfg),
+    }
+
+
+def shared_block_apply(params, x, h0, cfg, compute_dtype, positions=None,
+                       cache=None):
+    inp = jnp.concatenate([x, h0], axis=-1)
+    inp = peft_lib.apply_linear(params["fuse"], inp, cfg.peft, compute_dtype)
+    if cache is not None:
+        y, aux, new_cache = block_apply(params["block"], inp, cfg,
+                                        compute_dtype, positions=positions,
+                                        cache=cache)
+        return x + y, new_cache
+    y, _, _ = block_apply(params["block"], inp, cfg, compute_dtype,
+                          positions=positions)
+    return x + y
+
+
+def shared_block_decode(params, x_t, h0_t, cache, pos, cfg, compute_dtype):
+    inp = jnp.concatenate([x_t, h0_t], axis=-1)
+    inp = peft_lib.apply_linear(params["fuse"], inp, cfg.peft, compute_dtype)
+    y, new_cache = block_decode(params["block"], inp, cache, pos, cfg,
+                                compute_dtype)
+    return x_t + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full model init
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Dict:
+    param_dtype = _dt(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    p: Dict[str, Any] = {
+        "embed": layers.embed_init(keys[0], cfg.padded_vocab_size, cfg.d_model,
+                                   param_dtype),
+        "final_norm": layers.norm_init(cfg.d_model, cfg.norm_type,
+                                       param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = {"w": layers.truncated_normal_init(
+            keys[1], (cfg.d_model, cfg.padded_vocab_size), param_dtype)}
+
+    pattern = cfg.layer_pattern()
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        def one(k):
+            return block_init(k, cfg, cross=cfg.is_encoder_decoder)
+        # params are ALWAYS scan-stacked (L, ...): checkpoints/shardings stay
+        # identical whether apply uses lax.scan or an unrolled loop
+        p["layers"] = jax.vmap(one)(jax.random.split(keys[2],
+                                                     cfg.num_layers))
+        if cfg.is_encoder_decoder:
+            def enc_one(k):
+                return block_init(k, cfg)
+            p["enc_layers"] = jax.vmap(enc_one)(
+                jax.random.split(keys[3], cfg.num_encoder_layers))
+            p["enc_final_norm"] = layers.norm_init(cfg.d_model, cfg.norm_type,
+                                                   param_dtype)
+    elif cfg.family == "ssm":
+        def one(k):
+            return ssm_lib.mamba_block_init(
+                k, cfg, param_dtype, _dt(cfg.peft_dtype),
+                "in_proj" in cfg.peft.target_modules,
+                "out_proj" in cfg.peft.target_modules)
+        stack = jax.vmap(lambda k: {"ssm": one(k), "ln": layers.norm_init(
+            cfg.d_model, cfg.norm_type, param_dtype)})
+        p["layers"] = stack(jax.random.split(keys[2], cfg.num_layers))
+    elif cfg.family == "hybrid":
+        # python-loop layers (non-uniform pattern); shared attention block
+        lkeys = jax.random.split(keys[2], cfg.num_layers)
+        p["layers"] = []
+        for i, ch in enumerate(pattern):
+            if ch == "M":
+                p["layers"].append({"ssm": ssm_lib.mamba_block_init(
+                    lkeys[i], cfg, param_dtype, _dt(cfg.peft_dtype),
+                    "in_proj" in cfg.peft.target_modules,
+                    "out_proj" in cfg.peft.target_modules),
+                    "ln": layers.norm_init(cfg.d_model, cfg.norm_type,
+                                           param_dtype)})
+            else:
+                p["layers"].append({"marker": jnp.zeros((), jnp.float32)})
+        p["shared_attn"] = shared_block_init(keys[4], cfg)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward paths
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, batch: Dict, cfg: ModelConfig, compute_dtype):
+    x = layers.embed_lookup(params["embed"], batch["tokens"], compute_dtype)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(compute_dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    return shard_act(x, ("batch", "seq", "embed"))
+
+
+def _unrolled_scan(body, carry, xs, length: int):
+    """lax.scan semantics with a python loop — exact per-iteration HLO cost
+    (XLA's HloCostAnalysis counts while-loop bodies ONCE; the dry-run unrolls
+    so FLOPs/bytes/collectives in cost_analysis reflect all layers)."""
+    ys = []
+    for i in range(length):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys) \
+        if ys and ys[0] is not None else None
+    return carry, stacked
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "minimal":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _run_decoder_stack(params, x, cfg: ModelConfig, compute_dtype,
+                       enc_out=None, positions=None, moe_impl="capacity",
+                       caches=None):
+    """Returns (x, total_aux, new_caches or None)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    write_cache = caches is not None
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        use_rope = not cfg.is_encoder_decoder or True  # RoPE everywhere
+        def body(carry, xs):
+            h = carry
+            if write_cache:
+                lp, cache_l = xs
+                h, aux, nc = block_apply(lp, h, cfg, compute_dtype, True,
+                                         enc_out, positions, use_rope,
+                                         cache=cache_l, moe_impl=moe_impl)
+                return h, (aux, nc)
+            lp = xs
+            h, aux, _ = block_apply(lp, h, cfg, compute_dtype, True,
+                                    enc_out, positions, use_rope,
+                                    moe_impl=moe_impl)
+            return h, aux
+        body = _remat(body, cfg)
+        xs = (params["layers"], caches) if write_cache else params["layers"]
+        if cfg.scan_layers:
+            x, ys = jax.lax.scan(body, x, xs)
+        else:
+            x, ys = _unrolled_scan(body, x, xs, cfg.num_layers)
+        if write_cache:
+            auxs, new_caches = ys
+            return x, auxs.sum(), new_caches
+        return x, ys.sum(), None
+
+    if cfg.family == "ssm":
+        def body(h, lp):
+            hn = layers.apply_norm(lp["ln"], h)
+            return h + ssm_lib.mamba_block_apply(lp["ssm"], hn, cfg,
+                                                 compute_dtype), None
+        body = _remat(body, cfg)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["layers"])
+        else:
+            x, _ = _unrolled_scan(body, x, params["layers"], cfg.num_layers)
+        return x, aux_total, None
+
+    if cfg.family == "hybrid":
+        h0 = x
+        pattern = cfg.layer_pattern()
+        new_caches = []
+        for i, ch in enumerate(pattern):
+            lp = params["layers"][i]
+            if ch == "M":
+                hn = layers.apply_norm(lp["ln"], x)
+                def mbody(hh):
+                    return ssm_lib.mamba_block_apply(lp["ssm"], hh, cfg,
+                                                     compute_dtype)
+                x = x + _remat(mbody, cfg)(hn)
+                new_caches.append(None)
+            else:
+                if write_cache:
+                    x, nc = shared_block_apply(params["shared_attn"], x, h0,
+                                               cfg, compute_dtype, positions,
+                                               cache=caches[i])
+                    new_caches.append(nc)
+                else:
+                    x = shared_block_apply(params["shared_attn"], x, h0, cfg,
+                                           compute_dtype, positions)
+                    new_caches.append(None)
+        return x, aux_total, (new_caches if write_cache else None)
+    raise ValueError(cfg.family)
+
+
+def _run_encoder(params, src_embeds, cfg: ModelConfig, compute_dtype):
+    x = shard_act(src_embeds.astype(compute_dtype), ("batch", "seq", "embed"))
+
+    def body(h, lp):
+        h, _, _ = block_apply(lp, h, cfg, compute_dtype, causal=False)
+        return h, None
+    body = _remat(body, cfg)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    else:
+        x, _ = _unrolled_scan(body, x, params["enc_layers"],
+                              cfg.num_encoder_layers)
+    return layers.apply_norm(params["enc_final_norm"], x)
+
+
+def forward_hidden(params, batch: Dict, cfg: ModelConfig,
+                   moe_impl="capacity", caches=None):
+    """Decoder hidden states (pre lm_head). Returns (h, aux, new_caches)."""
+    compute_dtype = _dt(cfg.dtype)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _run_encoder(params, batch["src_embeds"], cfg, compute_dtype)
+    x = _embed_inputs(params, batch, cfg, compute_dtype)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, aux, new_caches = _run_decoder_stack(params, x, cfg, compute_dtype,
+                                            enc_out, positions, moe_impl,
+                                            caches)
+    x = layers.apply_norm(params["final_norm"], x)
+    return x, aux, new_caches
+
+
+def lm_logits(params, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    compute_dtype = _dt(cfg.dtype)
+    w = (params["embed"]["w"].T if cfg.tie_embeddings
+         else params["lm_head"]["w"])
+    logits = h.astype(compute_dtype) @ w.astype(compute_dtype)
+    return shard_act(logits, ("batch", "seq", "vocab"))
+
+
+def chunked_ce_loss(params, h: jax.Array, labels: jax.Array,
+                    cfg: ModelConfig, loss_chunk: int = 1024,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Cross-entropy over sequence chunks — full (B,S,V) logits are never
+    materialized (vocab up to 256k at the assigned shapes)."""
+    b, s, d = h.shape
+    loss_chunk = min(loss_chunk, s)
+    while s % loss_chunk:
+        loss_chunk -= 1
+    nc = s // loss_chunk
+    hc = jnp.moveaxis(h.reshape(b, nc, loss_chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, loss_chunk), 1, 0)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        hh, ll = inp
+        logits = lm_logits(params, hh, cfg).astype(jnp.float32)
+        mask = ll >= 0
+        ll = jnp.maximum(ll, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mask
+        return (tot + nll.sum(), cnt + mask.sum()), None
+
+    init = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32))
+    if cfg.unroll_loops:
+        (tot, cnt), _ = _unrolled_scan(body, init, (hc, lc), nc)
+    else:
+        (tot, cnt), _ = jax.lax.scan(body, init, (hc, lc))
+    return tot / jnp.maximum(cnt, 1), cnt
+
+
+def loss_fn(params, batch: Dict, cfg: ModelConfig, moe_impl="capacity",
+            ) -> Tuple[jax.Array, Dict]:
+    h, aux, _ = forward_hidden(params, batch, cfg, moe_impl)
+    labels = batch["labels"]
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        # patch positions carry no next-token loss
+        pe = batch["patch_embeds"]
+        pad = jnp.full((labels.shape[0], pe.shape[1]), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    loss, n_tok = chunked_ce_loss(params, h, labels, cfg)
+    if cfg.family == "moe":
+        loss = loss + cfg.moe.aux_loss_weight * aux
+    return loss, {"loss": loss, "aux": aux, "tokens": n_tok}
+
+
+def forward_logits(params, batch: Dict, cfg: ModelConfig, moe_impl="dense"):
+    """Full logits — small-scale/eval use only."""
+    h, _, _ = forward_hidden(params, batch, cfg, moe_impl)
+    return lm_logits(params, h, cfg)
+
+
+# ---------------------------------------------------------------------------
+# caches + prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    cdtype = _dt(cfg.dtype)
+
+    def attn_cache():
+        return {"k": jnp.zeros((batch, max_len, kh, hd), cdtype),
+                "v": jnp.zeros((batch, max_len, kh, hd), cdtype)}
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        # always layer-stacked (scan and unrolled paths index the same tree)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape)
+            .copy(), attn_cache())
+    if cfg.family == "audio":
+        self_c = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape).copy(),
+            attn_cache())
+        return {"self": self_c, "cross": None}  # cross filled at prefill
+    if cfg.family == "ssm":
+        one = ssm_lib.mamba_cache_init(cfg, batch, cdtype)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape).copy(),
+            one)
+    if cfg.family == "hybrid":
+        caches = []
+        for ch in cfg.layer_pattern():
+            caches.append(ssm_lib.mamba_cache_init(cfg, batch, cdtype)
+                          if ch == "M" else attn_cache())
+        return caches
+    raise ValueError(cfg.family)
+
+
+def prefill(params, batch: Dict, cfg: ModelConfig, max_len: int,
+            moe_impl="capacity"):
+    """Run the prompt, build caches, return last-position logits + cache."""
+    compute_dtype = _dt(cfg.dtype)
+    bsz = batch["tokens"].shape[0]
+    if cfg.family in ("ssm", "hybrid"):
+        # run chunked scan once, then rebuild caches by replaying states:
+        # simpler faithful approach — run the recurrent path with state carry
+        return _prefill_recurrent(params, batch, cfg, max_len, compute_dtype)
+    cache = init_cache(cfg, bsz, max_len)
+    if cfg.family == "audio":
+        enc_out = _run_encoder(params, batch["src_embeds"], cfg, compute_dtype)
+        x = _embed_inputs(params, batch, cfg, compute_dtype)
+        positions = jnp.arange(x.shape[1])[None, :]
+        # build cross k/v once
+        kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+        def cross_kv(lp):
+            k = peft_lib.apply_linear(lp["cross"]["k"], enc_out, cfg.peft,
+                                      compute_dtype)
+            v = peft_lib.apply_linear(lp["cross"]["v"], enc_out, cfg.peft,
+                                      compute_dtype)
+            return {"k": k.reshape(*enc_out.shape[:-1], kh, hd),
+                    "v": v.reshape(*enc_out.shape[:-1], kh, hd)}
+        cross = jax.vmap(cross_kv)(params["layers"])
+        cross["len"] = jnp.full((), enc_out.shape[1], jnp.int32)
+
+        def body(h, xs):
+            lp, cache_l, cross_l = xs
+            h, _, nc = block_apply(lp, h, cfg, compute_dtype, True,
+                                   enc_out, positions, True, cache=cache_l,
+                                   moe_impl=moe_impl)
+            return h, nc
+        cross_per_layer = {"k": cross["k"], "v": cross["v"]}
+        x, new_self = jax.lax.scan(body, x,
+                                   (params["layers"], cache["self"],
+                                    cross_per_layer))
+        h = layers.apply_norm(params["final_norm"], x)
+        logits = lm_logits(params, h[:, -1:, :], cfg)
+        return logits, {"self": new_self,
+                        "cross": {**cross_per_layer,
+                                  "len": cross["len"]}}
+    h, _, new_caches = forward_hidden(params, batch, cfg, moe_impl,
+                                      caches=cache)
+    logits = lm_logits(params, h[:, -1:, :], cfg)
+    return logits, new_caches
+
+
+def _prefill_recurrent(params, batch, cfg, max_len, compute_dtype):
+    """SSM/hybrid prefill: one chunked forward pass; decode caches come from
+    the final SSD/conv states (and KV writes for hybrid attention layers)."""
+    bsz = batch["tokens"].shape[0]
+    x = _embed_inputs(params, batch, cfg, compute_dtype)
+    s = x.shape[1]
+
+    if cfg.family == "ssm":
+        def body(h, lp):
+            hn = layers.apply_norm(lp["ln"], h)
+            y, cache_l = ssm_lib.mamba_block_apply(lp["ssm"], hn, cfg,
+                                                   compute_dtype,
+                                                   return_cache=True)
+            return h + y, cache_l
+        body = _remat(body, cfg)
+        if cfg.scan_layers:
+            x, caches = jax.lax.scan(body, x, params["layers"])
+        else:
+            x, caches = _unrolled_scan(body, x, params["layers"],
+                                       cfg.num_layers)
+    else:  # hybrid
+        h0 = x
+        positions = jnp.arange(s)[None, :]
+        attn_cache_proto = init_cache(cfg, bsz, max_len)
+        caches = []
+        for i, ch in enumerate(cfg.layer_pattern()):
+            lp = params["layers"][i]
+            if ch == "M":
+                hn = layers.apply_norm(lp["ln"], x)
+                y, cache_l = ssm_lib.mamba_block_apply(lp["ssm"], hn, cfg,
+                                                       compute_dtype,
+                                                       return_cache=True)
+                x = x + y
+            else:
+                x, cache_l = shared_block_apply(params["shared_attn"], x, h0,
+                                                cfg, compute_dtype, positions,
+                                                cache=attn_cache_proto[i])
+            caches.append(cache_l)
+    x = layers.apply_norm(params["final_norm"], x)
+    logits = lm_logits(params, x[:, -1:, :], cfg)
+    return logits, caches
+
+
+def decode_step(params, batch: Dict, cache: PyTree, pos, cfg: ModelConfig,
+                moe_impl="dense"):
+    """One-token serve step. batch['tokens']: (B,1). Returns (logits, cache)."""
+    compute_dtype = _dt(cfg.dtype)
+    x = layers.embed_lookup(params["embed"], batch["tokens"], compute_dtype)
+    x = shard_act(x, ("batch", None, "embed"))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(h, xs):
+            lp, cache_l = xs
+            h, nc = block_decode(lp, h, cache_l, pos, cfg, compute_dtype,
+                                 moe_impl=moe_impl)
+            return h, nc
+        if cfg.scan_layers:
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        else:
+            x, new_cache = _unrolled_scan(body, x, (params["layers"], cache),
+                                          cfg.num_layers)
+    elif cfg.family == "audio":
+        cross = cache["cross"]
+
+        def body(h, xs):
+            lp, cache_l, cross_l = xs
+            h, nc = block_decode(lp, h, cache_l, pos, cfg, compute_dtype,
+                                 cross_cache={**cross_l, "len": cross["len"]})
+            return h, nc
+        x, new_self = jax.lax.scan(
+            body, x, (params["layers"], cache["self"],
+                      {"k": cross["k"], "v": cross["v"]}))
+        new_cache = {"self": new_self, "cross": cross}
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            lp, cache_l = xs
+            hn = layers.apply_norm(lp["ln"], h)
+            y, nc = ssm_lib.mamba_block_decode(lp["ssm"], hn, cache_l, cfg,
+                                               compute_dtype)
+            return h + y, nc
+        if cfg.scan_layers:
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        else:
+            x, new_cache = _unrolled_scan(body, x, (params["layers"], cache),
+                                          cfg.num_layers)
+    elif cfg.family == "hybrid":
+        h0 = x
+        new_cache = []
+        for i, ch in enumerate(cfg.layer_pattern()):
+            lp = params["layers"][i]
+            if ch == "M":
+                hn = layers.apply_norm(lp["ln"], x)
+                y, nc = ssm_lib.mamba_block_decode(lp["ssm"], hn, cache[i],
+                                                   cfg, compute_dtype)
+                x = x + y
+            else:
+                x, nc = shared_block_decode(params["shared_attn"], x, h0,
+                                            cache[i], pos, cfg, compute_dtype)
+            new_cache.append(nc)
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.apply_norm(params["final_norm"], x)
+    logits = lm_logits(params, x, cfg)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sharding axes + trainability (path-pattern based)
+# ---------------------------------------------------------------------------
+
+_COL_PAR = {"q", "k", "v", "gate", "up", "in_proj", "fuse", "router"}
+_ROW_PAR = {"o", "down", "out_proj"}
+
+
+def _leaf_role_axes(path: Tuple[str, ...], leaf) -> Tuple:
+    names = [p for p in path]
+    leaf_name = names[-1]
+    module = names[-2] if len(names) >= 2 else ""
+    # embeddings
+    if module == "embed" and leaf_name == "w":
+        return ("vocab", "fsdp")
+    if module == "lm_head" and leaf_name == "w":
+        return ("fsdp", "vocab")
+    # norms / scalars / ssm non-linears
+    if leaf_name in ("scale", "bias", "a_log", "d_skip", "dt_bias", "conv_b",
+                     "marker"):
+        return (None,) * 1
+    if leaf_name == "conv_w":
+        return (None, None)
+    # linear param roles
+    direction = "col"
+    for n in reversed(names):
+        if n in _COL_PAR:
+            direction = "col"
+            break
+        if n in _ROW_PAR:
+            direction = "row"
+            break
+    in_ax, out_ax = (("fsdp", "tensor") if direction == "col"
+                     else ("tensor", "fsdp"))
+    role = {
+        "w": (in_ax, out_ax), "w_res": (in_ax, out_ax),
+        "A": (in_ax, None), "a": (in_ax, None),
+        "B": (None, out_ax), "b": (None, out_ax),
+        "s": (None, None), "m": (out_ax,), "out_scale": (out_ax,),
+        "q": (None,), "alpha": (None,), "beta": (None,),
+        "theta": (None, None), "g": (None, None, None, None),
+    }
+    if leaf_name not in role:
+        return (None,) * leaf.ndim
+    return role[leaf_name]
+
+
+def _path_names(kp) -> Tuple[str, ...]:
+    out = []
+    for k in kp:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+class LogicalAxes:
+    """Tuple-like list of logical axis names; a LEAF under jax.tree.map."""
+    __slots__ = ("axes",)
+
+    def __init__(self, axes):
+        self.axes = tuple(axes)
+
+    def __iter__(self):
+        return iter(self.axes)
+
+    def __len__(self):
+        return len(self.axes)
+
+    def __getitem__(self, i):
+        return self.axes[i]
+
+    def __repr__(self):
+        return f"LogicalAxes{self.axes}"
+
+    def __eq__(self, other):
+        return tuple(self) == tuple(other)
+
+    def __hash__(self):
+        return hash(self.axes)
+
+
+def param_axes(cfg: ModelConfig, params: PyTree) -> PyTree:
+    """Logical sharding axes tree parallel to ``params`` (works on abstract
+    trees from jax.eval_shape).  Leaves are LogicalAxes (atomic)."""
+    def assign(kp, leaf):
+        names = _path_names(kp)
+        role = _leaf_role_axes(names, leaf)
+        extra = leaf.ndim - len(role)
+        if extra < 0:
+            return LogicalAxes((None,) * leaf.ndim)
+        lead = [None] * extra
+        # expert-stacked linears: innermost extra dim is the expert axis
+        if extra >= 1 and "moe" in names and not any(
+                n == "shared" for n in names):
+            if names[-2] in ("up", "down", "gate"):
+                lead[-1] = "expert"
+        return LogicalAxes(tuple(lead) + tuple(role))
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def trainable_mask(cfg: ModelConfig, params: PyTree,
+                   full_finetune: bool = False) -> PyTree:
+    trainable = set(peft_lib.trainable_names(cfg.peft.method))
+
+    def assign(kp, leaf):
+        if full_finetune:
+            return True
+        names = _path_names(kp)
+        return names[-1] in trainable
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_params(k, cfg), key)
+
+
+def count_params(params: PyTree) -> int:
+    return sum(int(jnp.size(x)) if not hasattr(x, "size") else int(x.size)
+               for x in jax.tree.leaves(params))
+
+
+def count_trainable(cfg: ModelConfig, params: PyTree) -> int:
+    mask = trainable_mask(cfg, params)
+    return sum(int(x.size) for x, m in zip(jax.tree.leaves(params),
+                                           jax.tree.leaves(mask)) if m)
+
+
+def cache_axes(cfg: ModelConfig, cache: PyTree) -> PyTree:
+    """Logical sharding axes for a decode cache tree."""
+    def assign(kp, leaf):
+        names = _path_names(kp)
+        n = names[-1]
+        if n in ("k", "v"):
+            role = ("batch", "cache_seq", "kv_heads", None)
+        elif n == "conv_state":
+            role = ("batch", None, "conv_ch")
+        elif n == "ssm_state":
+            role = ("batch", "heads", None, None)
+        elif n == "len":
+            role = ()
+        else:
+            role = (None,) * leaf.ndim
+        extra = leaf.ndim - len(role)
+        return LogicalAxes((None,) * max(extra, 0) + tuple(role))
+    return jax.tree_util.tree_map_with_path(assign, cache)
+
+
+def rewrap_peft(merged_params: PyTree, cfg: ModelConfig) -> PyTree:
+    """Wrap every plain linear of a merged/pretrained model with the
+    cfg.peft structure (SVD init etc.) — the "load a checkpoint, attach
+    PSOFT" entry point used by fine-tuning drivers."""
+    def rec(node, path):
+        if isinstance(node, dict) and set(node) == {"w"} and \
+                hasattr(node["w"], "ndim") and node["w"].ndim >= 2 and \
+                path and path[-1] in (_COL_PAR | _ROW_PAR):
+            w = node["w"]
+            wrapped = path[-1] in cfg.peft.target_modules
+
+            def init_one(wmat):
+                return peft_lib.init_linear(
+                    jax.random.PRNGKey(0), wmat, cfg.peft, wrapped,
+                    _dt(cfg.param_dtype), _dt(cfg.peft_dtype))
+            fn = init_one
+            for _ in range(w.ndim - 2):
+                fn = jax.vmap(fn)
+            return fn(w)
+        if isinstance(node, dict):
+            return {k: rec(v, path + [k]) for k, v in node.items()}
+        if isinstance(node, list):
+            return [rec(v, path + [str(i)]) for i, v in enumerate(node)]
+        return node
+    return rec(merged_params, [])

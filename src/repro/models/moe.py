@@ -1,0 +1,171 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded dispatch.
+
+Two implementations share one interface:
+
+* ``capacity`` (default at scale): sort-based token→expert dispatch into
+  (E, C, D) buffers — EP-shardable (expert axis over "model"), O(T·k·logT)
+  routing, drops overflow tokens like GShard/Switch.
+* ``dense``: every expert runs on every token, gate-weighted combine — exact,
+  used as the oracle in tests and for tiny smoke configs.
+
+PSOFT wraps the *per-expert* FFN weights (vmapped SVD over the expert axis) —
+the paper's method extended first-class to MoE.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import peft as peft_lib
+from repro.models import layers
+from repro.sharding import shard_act
+
+
+def _group_count(t: int) -> int:
+    """Number of dispatch groups: the batch-sharding extent (GShard groups
+    align with data shards so every sort/scatter stays shard-local)."""
+    from repro.sharding import current_rules
+    ctx = current_rules()
+    if ctx is None:
+        return 1
+    mesh, rules = ctx
+    axes = rules.get("batch")
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    g = 1
+    for a in axes:
+        g *= dict(mesh.shape).get(a, 1)
+    while t % g:
+        g -= 1
+    return max(g, 1)
+
+
+def apply_linear_stacked(params: Dict, x: jax.Array, cfg, compute_dtype):
+    """vmap a PEFT linear over a leading (expert) axis of params AND x."""
+    return jax.vmap(
+        lambda p, xx: peft_lib.apply_linear(p, xx, cfg, compute_dtype)
+    )(params, x)
+
+
+def moe_init(key, cfg: ModelConfig, param_dtype, peft_dtype,
+             targets: Tuple[str, ...]) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    e = cfg.moe.num_experts
+    keys = jax.random.split(key, 8)
+    gated = cfg.mlp_type == "swiglu"
+
+    def expert_stack(k, d_in, d_out, name):
+        ws = jax.vmap(lambda kk: layers.truncated_normal_init(
+            kk, (d_in, d_out), jnp.float32))(jax.random.split(k, e))
+        return jax.vmap(lambda kk, w: peft_lib.init_linear(
+            kk, w, cfg.peft, name in targets, param_dtype, peft_dtype)
+        )(jax.random.split(k, e), ws)
+
+    p = {
+        "router": {"w": layers.truncated_normal_init(keys[0], (d, e),
+                                                     jnp.float32)},
+        "up": expert_stack(keys[1], d, f, "up"),
+        "down": expert_stack(keys[2], f, d, "down"),
+    }
+    if gated:
+        p["gate"] = expert_stack(keys[3], d, f, "gate")
+    if cfg.moe.num_shared_experts > 0:
+        fs = cfg.moe.num_shared_experts * f
+        from repro.models.model import mlp_init  # local import (cycle)
+        p["shared"] = mlp_init(keys[4], cfg, d_ff=fs, param_dtype=param_dtype,
+                               peft_dtype=peft_dtype, targets=targets)
+    return p
+
+
+def _expert_ffn(p: Dict, x: jax.Array, cfg: ModelConfig, compute_dtype):
+    """x: (E, C, D) -> (E, C, D) through per-expert (PEFT-wrapped) FFN."""
+    act = layers.mlp_activation(cfg.mlp_type)
+    up = apply_linear_stacked(p["up"], x, cfg.peft, compute_dtype)
+    if "gate" in p:
+        gate = apply_linear_stacked(p["gate"], x, cfg.peft, compute_dtype)
+        hidden = act(gate.astype(jnp.float32)).astype(compute_dtype) * up
+    else:
+        hidden = act(up.astype(jnp.float32)).astype(compute_dtype)
+    return apply_linear_stacked(p["down"], hidden, cfg.peft, compute_dtype)
+
+
+def moe_apply(params: Dict, x: jax.Array, cfg: ModelConfig, compute_dtype,
+              impl: str = "capacity") -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D). Returns (y, aux_load_balance_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    xt = x.reshape(b * s, d)
+    t = b * s
+
+    logits = xt.astype(jnp.float32) @ params["router"]["w"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    gates, idx = jax.lax.top_k(probs, k)                        # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux (Switch): E * Σ_e fraction_e * mean_prob_e
+    frac = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(frac * jnp.mean(probs, axis=0))
+
+    if impl == "dense":
+        # (E, T, D): every expert on every token — oracle path
+        xe = jnp.broadcast_to(xt[None], (e, t, d))
+        ye = _expert_ffn(params, xe, cfg, compute_dtype)        # (E, T, D)
+        comb = jnp.zeros((t, e), jnp.float32).at[
+            jnp.arange(t)[:, None], idx].add(gates)
+        y = jnp.einsum("te,etd->td", comb.astype(compute_dtype), ye)
+    else:
+        # GShard-style GROUPED dispatch: tokens are split into G groups
+        # aligned with the batch-sharding axes, every sort/scatter/gather is
+        # group-local (vmapped), and capacity is per (group, expert).  The
+        # (G, E, cap_g, D) buffers shard over (batch-axes, model) with no
+        # cross-shard index traffic — arbitrary global scatter/gather would
+        # make XLA's SPMD partitioner replicate the 10s-of-GB buffers.
+        g = _group_count(t)
+        tg = t // g
+        cap_g = int(tg * k * cfg.moe.capacity_factor / e)
+        cap_g = max(4, min(cap_g, tg))
+        xt3 = shard_act(xt.reshape(g, tg, d), ("batch", None, None))
+        gates3 = gates.reshape(g, tg, k)
+        idx3 = idx.reshape(g, tg, k)
+
+        def dispatch(xg, idxg):
+            flat_e = idxg.reshape(-1)                       # (tg*k,)
+            order = jnp.argsort(flat_e)
+            sorted_e = flat_e[order]
+            first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+            pos = jnp.arange(tg * k) - first
+            src_tok = order // k
+            gathered = xg[src_tok].astype(compute_dtype)
+            buf = jnp.zeros((e, cap_g, d), compute_dtype).at[
+                sorted_e, pos].set(gathered, mode="drop")
+            return buf, (order, sorted_e, pos, src_tok)
+
+        buf, route = jax.vmap(dispatch)(xt3, idx3)          # (G,E,capg,D)
+        buf = shard_act(buf, ("batch", "expert", None, None))
+        out = jax.vmap(lambda bg: _expert_ffn(params, bg, cfg,
+                                              compute_dtype))(buf)
+        out = shard_act(out, ("batch", "expert", None, None))
+
+        def combine(outg, gatesg, routeg):
+            order, sorted_e, pos, src_tok = routeg
+            keep = pos < cap_g
+            got = outg[sorted_e, jnp.minimum(pos, cap_g - 1)]
+            got = jnp.where(keep[:, None], got, 0.0)
+            gflat = gatesg.reshape(-1)[order].astype(compute_dtype)
+            return jnp.zeros((tg, d), compute_dtype).at[src_tok].add(
+                got * gflat[:, None])
+
+        y = jax.vmap(combine)(out, gates3, route)           # (G, tg, D)
+        y = shard_act(y, ("batch", None, None)).reshape(t, d)
+
+    y = y.reshape(b, s, d).astype(compute_dtype)
+    if "shared" in params:
+        from repro.models.model import mlp_apply
+        y = y + mlp_apply(params["shared"], x.astype(compute_dtype), cfg,
+                          compute_dtype)
+    return y, aux

@@ -1,0 +1,243 @@
+"""Mamba2 SSD (state-space duality) block — chunked training scan + O(1) decode.
+
+Follows Dao & Gu (arXiv:2405.21060): the sequence is split into chunks of
+length Q; within a chunk the SSD output is computed in matmul ("attention")
+form on the MXU, and a single associative recurrence over chunk states covers
+the inter-chunk contribution.  Per-step decode maintains (conv_state,
+ssm_state) and costs O(H·P·N).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import peft as peft_lib
+from repro.models import layers
+
+
+def ssm_dims(cfg: ModelConfig) -> Dict[str, int]:
+    d_inner = cfg.ssm.expand * cfg.d_model
+    heads = d_inner // cfg.ssm.head_dim
+    g, n = cfg.ssm.ngroups, cfg.ssm.state_size
+    conv_ch = d_inner + 2 * g * n
+    in_proj_out = 2 * d_inner + 2 * g * n + heads  # z, x, B, C, dt
+    return dict(d_inner=d_inner, heads=heads, g=g, n=n, conv_ch=conv_ch,
+                in_proj_out=in_proj_out)
+
+
+def _split_in_proj(zxbcdt: jax.Array, cfg: ModelConfig):
+    d = ssm_dims(cfg)
+    z, x, bmat, cmat, dt = jnp.split(
+        zxbcdt,
+        [d["d_inner"], 2 * d["d_inner"], 2 * d["d_inner"] + d["g"] * d["n"],
+         2 * d["d_inner"] + 2 * d["g"] * d["n"]],
+        axis=-1)
+    return z, x, bmat, cmat, dt
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,C); w: (K,C); b: (C,)."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array,
+              b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x_t: (B,C); conv_state: (B,K-1,C) past inputs. Returns (y_t, new_state)."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    y = jax.nn.silu(y + b.astype(jnp.float32)).astype(x_t.dtype)
+    return y, window[:, 1:]
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                bmat: jax.Array, cmat: jax.Array, d_skip: jax.Array,
+                dt_bias: jax.Array, chunk: int,
+                initial_state: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD forward.
+
+    x: (B,S,H,P) dt: (B,S,H) a_log: (H,) bmat/cmat: (B,S,G,N) d_skip: (H,)
+    Returns y (B,S,H,P) and final state (B,H,P,N).
+    """
+    bsz, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + dt_bias.astype(jnp.float32))       # (B,S,H)
+    a = -jnp.exp(a_log.astype(jnp.float32))                   # (H,) negative
+    da = dt * a                                               # (B,S,H) ≤ 0
+    xbar = x.astype(jnp.float32) * dt[..., None]              # (B,S,H,P)
+
+    # per-chunk views moved to the scan axis (chunks processed sequentially:
+    # keeps live intermediates at O(B·Q²·H) instead of O(B·C·Q²·H))
+    da_c = jnp.moveaxis(da.reshape(bsz, nc, chunk, h), 1, 0)
+    xb_c = jnp.moveaxis(xbar.reshape(bsz, nc, chunk, h, p), 1, 0)
+    b_c = jnp.moveaxis(bmat.reshape(bsz, nc, chunk, g, n), 1, 0).astype(
+        jnp.float32)
+    c_c = jnp.moveaxis(cmat.reshape(bsz, nc, chunk, g, n), 1, 0).astype(
+        jnp.float32)
+
+    iq = jnp.arange(chunk)
+    causal = iq[:, None] >= iq[None, :]
+    h0 = (jnp.zeros((bsz, h, n, p), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def chunk_step(hprev, inp):
+        da_q, xb_q, b_q, c_q = inp        # (B,Q,H) (B,Q,H,P) (B,Q,G,N) ×2
+        cum = jnp.cumsum(da_q, axis=1)                        # (B,Q,H)
+        total = cum[:, -1]                                    # (B,H)
+        # intra-chunk: L[i,j] = exp(cum_i - cum_j), i ≥ j
+        lmat = jnp.where(causal[None, :, :, None],
+                         jnp.exp(cum[:, :, None, :] - cum[:, None, :, :]), 0.0)
+        cb = jnp.einsum("bqgn,bkgn->bqkg", c_q, b_q)          # (B,Q,Q,G)
+        cb = jnp.repeat(cb, rep, axis=-1)                     # (B,Q,Q,H)
+        y_intra = jnp.einsum("bqkh,bqkh,bkhp->bqhp", cb, lmat, xb_q)
+        # inter-chunk: y += exp(cum) C · h_prev
+        c_h = jnp.repeat(c_q, rep, axis=2)                    # (B,Q,H,N)
+        y_inter = jnp.einsum("bqhn,bhnp->bqhp",
+                             c_h * jnp.exp(cum)[..., None], hprev)
+        # new carry state
+        decay_r = jnp.exp(total[:, None, :] - cum)            # (B,Q,H)
+        b_h = jnp.repeat(b_q, rep, axis=2)                    # (B,Q,H,N)
+        st = jnp.einsum("bqhn,bqhp->bhnp", b_h * decay_r[..., None], xb_q)
+        hnew = hprev * jnp.exp(total)[..., None, None] + st
+        return hnew, y_intra + y_inter
+
+    hfinal, y_c = jax.lax.scan(chunk_step, h0, (da_c, xb_c, b_c, c_c))
+    y = jnp.moveaxis(y_c, 0, 1).reshape(bsz, s, h, p)
+    y = y + x.astype(jnp.float32) * d_skip.astype(jnp.float32)[None, None, :,
+                                                               None]
+    return y.astype(x.dtype), hfinal.astype(jnp.float32)
+
+
+def ssd_step(x_t: jax.Array, dt_t: jax.Array, a_log: jax.Array,
+             b_t: jax.Array, c_t: jax.Array, d_skip: jax.Array,
+             dt_bias: jax.Array, state: jax.Array,
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token SSD recurrence.
+
+    x_t: (B,H,P) dt_t: (B,H) b_t/c_t: (B,G,N) state: (B,H,N,P).
+    """
+    h = x_t.shape[1]
+    g = b_t.shape[1]
+    rep = h // g
+    dt = jax.nn.softplus(dt_t.astype(jnp.float32)
+                         + dt_bias.astype(jnp.float32))       # (B,H)
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(dt * a)                                   # (B,H)
+    b_h = jnp.repeat(b_t.astype(jnp.float32), rep, axis=1)    # (B,H,N)
+    c_h = jnp.repeat(c_t.astype(jnp.float32), rep, axis=1)
+    xbar = x_t.astype(jnp.float32) * dt[..., None]            # (B,H,P)
+    new_state = (state.astype(jnp.float32) * decay[..., None, None]
+                 + b_h[..., :, None] * xbar[..., None, :])    # (B,H,N,P)
+    y = jnp.einsum("bhn,bhnp->bhp", c_h, new_state)
+    y = y + x_t.astype(jnp.float32) * d_skip.astype(jnp.float32)[None, :, None]
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 block (params + forward)
+# ---------------------------------------------------------------------------
+
+def mamba_block_init(key, cfg: ModelConfig, param_dtype, peft_dtype,
+                     wrapped_in: bool, wrapped_out: bool) -> Dict:
+    d = ssm_dims(cfg)
+    keys = jax.random.split(key, 4)
+    w_in = layers.truncated_normal_init(keys[0], (cfg.d_model, d["in_proj_out"]),
+                                        jnp.float32)
+    w_out = layers.truncated_normal_init(keys[1], (d["d_inner"], cfg.d_model),
+                                         jnp.float32)
+    return {
+        "in_proj": peft_lib.init_linear(keys[2], w_in, cfg.peft, wrapped_in,
+                                        param_dtype, peft_dtype),
+        "out_proj": peft_lib.init_linear(keys[3], w_out, cfg.peft, wrapped_out,
+                                         param_dtype, peft_dtype),
+        "conv_w": layers.truncated_normal_init(
+            keys[2], (cfg.ssm.conv_width, d["conv_ch"]), param_dtype, 2.0),
+        "conv_b": jnp.zeros((d["conv_ch"],), param_dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, d["heads"])).astype(
+            jnp.float32),
+        "d_skip": jnp.ones((d["heads"],), jnp.float32),
+        "dt_bias": jnp.zeros((d["heads"],), jnp.float32),
+        "norm": layers.norm_init(d["d_inner"], "rmsnorm", param_dtype),
+    }
+
+
+def mamba_block_apply(params: Dict, u: jax.Array, cfg: ModelConfig,
+                      compute_dtype, return_cache: bool = False):
+    """Training/prefill forward. u: (B,S,D) -> (B,S,D) [, decode cache]."""
+    d = ssm_dims(cfg)
+    zxbcdt = peft_lib.apply_linear(params["in_proj"], u, cfg.peft,
+                                   compute_dtype)
+    z, x, bmat, cmat, dt = _split_in_proj(zxbcdt, cfg)
+    xbc_raw = jnp.concatenate([x, bmat, cmat], axis=-1)
+    xbc = causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    x, bmat, cmat = jnp.split(
+        xbc, [d["d_inner"], d["d_inner"] + d["g"] * d["n"]], axis=-1)
+    bsz, s = x.shape[0], x.shape[1]
+    y, hfinal = ssd_chunked(
+        x.reshape(bsz, s, d["heads"], cfg.ssm.head_dim),
+        dt, params["a_log"],
+        bmat.reshape(bsz, s, d["g"], d["n"]),
+        cmat.reshape(bsz, s, d["g"], d["n"]),
+        params["d_skip"], params["dt_bias"], cfg.ssm.chunk_size)
+    y = y.reshape(bsz, s, d["d_inner"])
+    y = layers.apply_norm(params["norm"], y * jax.nn.silu(
+        z.astype(jnp.float32)).astype(y.dtype))
+    out = peft_lib.apply_linear(params["out_proj"], y, cfg.peft,
+                                 compute_dtype)
+    if not return_cache:
+        return out
+    kw = cfg.ssm.conv_width
+    cache = {"conv_state": xbc_raw[:, -(kw - 1):, :].astype(u.dtype),
+             "ssm_state": hfinal}
+    return out, cache
+
+
+def mamba_block_decode(params: Dict, u_t: jax.Array, cache: Dict,
+                       cfg: ModelConfig, compute_dtype,
+                       ) -> Tuple[jax.Array, Dict]:
+    """Single-token decode. u_t: (B,1,D); cache: {conv_state, ssm_state}."""
+    d = ssm_dims(cfg)
+    zxbcdt = peft_lib.apply_linear(params["in_proj"], u_t[:, 0], cfg.peft,
+                                   compute_dtype)
+    z, x, bmat, cmat, dt = _split_in_proj(zxbcdt, cfg)
+    xbc = jnp.concatenate([x, bmat, cmat], axis=-1)           # (B, conv_ch)
+    xbc, conv_state = conv_step(xbc, cache["conv_state"], params["conv_w"],
+                                params["conv_b"])
+    x, bmat, cmat = jnp.split(
+        xbc, [d["d_inner"], d["d_inner"] + d["g"] * d["n"]], axis=-1)
+    bsz = x.shape[0]
+    y, ssm_state = ssd_step(
+        x.reshape(bsz, d["heads"], cfg.ssm.head_dim), dt, params["a_log"],
+        bmat.reshape(bsz, d["g"], d["n"]), cmat.reshape(bsz, d["g"], d["n"]),
+        params["d_skip"], params["dt_bias"], cache["ssm_state"])
+    y = y.reshape(bsz, d["d_inner"])
+    y = layers.apply_norm(params["norm"], y * jax.nn.silu(
+        z.astype(jnp.float32)).astype(y.dtype))
+    out = peft_lib.apply_linear(params["out_proj"], y, cfg.peft, compute_dtype)
+    return out[:, None, :], {"conv_state": conv_state, "ssm_state": ssm_state}
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    d = ssm_dims(cfg)
+    return {
+        "conv_state": jnp.zeros((batch, cfg.ssm.conv_width - 1, d["conv_ch"]),
+                                dtype),
+        "ssm_state": jnp.zeros((batch, d["heads"], d["n"], cfg.ssm.head_dim),
+                               jnp.float32),
+    }

@@ -1,0 +1,105 @@
+"""AdamW with PEFT-aware masking, built from scratch (no optax offline).
+
+Optimizer state exists ONLY for trainable leaves (the partitioned-tree trick:
+frozen leaves are ``None`` subtrees), so PEFT fine-tuning keeps optimizer
+memory at O(trainable) — one of the multi-dimensional-efficiency axes the
+paper measures.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def _is_none(x):
+    return x is None
+
+
+def partition(params: PyTree, mask: PyTree):
+    """Split params into (trainable, frozen) trees; absent leaves are None."""
+    tr = jax.tree.map(lambda p, m: p if m else None, params, mask)
+    fr = jax.tree.map(lambda p, m: None if m else p, params, mask)
+    return tr, fr
+
+
+def combine(tr: PyTree, fr: PyTree) -> PyTree:
+    return jax.tree.map(lambda a, b: b if a is None else a, tr, fr,
+                        is_leaf=_is_none)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    return jnp.sqrt(sum(leaves))
+
+
+def make_schedule(kind: str, base_lr: float, total_steps: int,
+                  warmup_ratio: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    warmup = max(1, int(total_steps * warmup_ratio))
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / warmup
+        frac = jnp.clip((step - warmup) / max(1, total_steps - warmup), 0, 1)
+        if kind == "cosine":
+            decay = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        elif kind == "linear":
+            decay = 1.0 - frac
+        else:
+            decay = jnp.ones(())
+        return base_lr * jnp.where(step < warmup, warm, decay)
+    return fn
+
+
+def adamw_init(trainable: PyTree) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         trainable)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_update(grads: PyTree, state: AdamWState, trainable: PyTree,
+                 lr: jax.Array, *, beta1=0.9, beta2=0.999, eps=1e-8,
+                 weight_decay=0.0, grad_clip_norm: float = 0.0):
+    """Returns (new_trainable, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if grad_clip_norm and grad_clip_norm > 0:
+        scale = jnp.minimum(1.0, grad_clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state.step + 1
+    b1c = 1 - beta1 ** step.astype(jnp.float32)
+    b2c = 1 - beta2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = beta1 * m + (1 - beta1) * g32
+        v = beta2 * v + (1 - beta2) * jnp.square(g32)
+        mh, vh = m / b1c, v / b2c
+        delta = mh / (jnp.sqrt(vh) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_p, treedef = jax.tree.flatten(trainable)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v,
+                                                 flat_p)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), {"grad_norm": gnorm}

@@ -1,0 +1,121 @@
+"""Merged-weight serving engine: batched prefill + KV-cache decode with
+continuous-batching slots.
+
+The PEFT adapters are merged into the base weights first (zero added
+inference latency — the reparameterization-methods property the paper builds
+on), so the serving graph is identical to the base model's.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import peft as peft_lib
+from repro.models import model as model_lib
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 16
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Fixed-slot continuous batcher over decode_step."""
+
+    def __init__(self, params, cfg: ModelConfig, max_len: int = 256,
+                 slots: int = 4, greedy: bool = True):
+        self.cfg = dataclasses.replace(
+            cfg, peft=cfg.peft.replace(method="none"))
+        self.params = peft_lib.merge_tree(params, cfg.peft)
+        self.max_len = max_len
+        self.slots = slots
+        self.greedy = greedy
+        self._decode = jax.jit(
+            lambda p, b, c, pos: model_lib.decode_step(p, b, c, pos,
+                                                       self.cfg))
+        self._prefill = jax.jit(
+            lambda p, b: model_lib.prefill(p, b, self.cfg, max_len))
+        self.cache = None
+        self.positions = np.zeros((slots,), np.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+
+    # -- admission ---------------------------------------------------------
+    def _admit(self, queue: List[Request]):
+        """Fill empty slots; prefill runs batched over the admitted group.
+
+        Admission is batch-synchronous (a wave is admitted only when all
+        slots are free) so every live slot shares the same decode position —
+        the single-scalar ``pos`` decode contract."""
+        if any(r is not None for r in self.active):
+            return
+        empty = [i for i, r in enumerate(self.active) if r is None]
+        if not empty or not queue:
+            return
+        batch_reqs = [queue.pop(0) for _ in empty[:len(queue)]]
+        plen = max(len(r.prompt) for r in batch_reqs)
+        toks = np.zeros((len(batch_reqs), plen), np.int32)
+        for j, r in enumerate(batch_reqs):
+            toks[j, plen - len(r.prompt):] = r.prompt  # left-pad
+        logits, cache = self._prefill(self.params,
+                                      {"tokens": jnp.asarray(toks)})
+        nxt = np.asarray(jnp.argmax(logits[:, -1, :self.cfg.vocab_size], -1))
+        for j, r in enumerate(batch_reqs):
+            slot = empty[j]
+            self.active[slot] = r
+            r.generated.append(int(nxt[j]))
+            self.positions[slot] = plen
+            self._install_cache(slot, cache, j)
+
+    def _install_cache(self, slot: int, cache, j: int):
+        sliced = jax.tree.map(lambda x: x[:, j:j + 1] if x.ndim > 1 else x,
+                              cache)
+        if self.cache is None:
+            self.cache = jax.tree.map(
+                lambda x: jnp.concatenate([x] * self.slots, axis=1)
+                if x.ndim > 1 else x, sliced)
+        else:
+            self.cache = jax.tree.map(
+                lambda full, s: jax.lax.dynamic_update_slice_in_dim(
+                    full, s.astype(full.dtype), slot, axis=1)
+                if full.ndim > 1 else full, self.cache, sliced)
+
+    # -- main loop ----------------------------------------------------------
+    def run(self, requests: List[Request], max_steps: int = 512,
+            ) -> List[Request]:
+        queue = list(requests)
+        finished: List[Request] = []
+        steps = 0
+        while (queue or any(self.active)) and steps < max_steps:
+            steps += 1
+            self._admit(queue)
+            live = [i for i, r in enumerate(self.active) if r is not None]
+            if not live:
+                continue
+            toks = np.zeros((self.slots, 1), np.int32)
+            for i in live:
+                toks[i, 0] = self.active[i].generated[-1]
+            pos = int(max(self.positions[i] for i in live))
+            logits, self.cache = self._decode(
+                self.params, {"tokens": jnp.asarray(toks)}, self.cache,
+                jnp.asarray(pos, jnp.int32))
+            nxt = np.asarray(jnp.argmax(
+                logits[:, -1, :self.cfg.vocab_size], -1))
+            for i in live:
+                r = self.active[i]
+                r.generated.append(int(nxt[i]))
+                self.positions[i] += 1
+                if (len(r.generated) >= r.max_new_tokens
+                        or self.positions[i] >= self.max_len - 1):
+                    r.done = True
+                    finished.append(r)
+                    self.active[i] = None
+        return finished

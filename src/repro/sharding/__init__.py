@@ -1,0 +1,4 @@
+from repro.sharding.rules import (  # noqa: F401
+    ShardingRules, default_rules, logical_spec, mesh_context, named_sharding,
+    shard_act, current_rules,
+)

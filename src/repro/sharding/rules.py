@@ -1,0 +1,155 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallbacks.
+
+Every parameter and activation in the model is annotated with *logical* axis
+names ("batch", "seq", "embed", "heads", "mlp", "vocab", "expert", ...).  A
+:class:`ShardingRules` maps logical names to physical mesh axes; when a
+tensor dimension is not divisible by the product of the assigned mesh axes the
+rule silently falls back to replication for that dimension (e.g. kv_heads=4 on
+a model axis of 16).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass
+class ShardingRules:
+    """logical axis name -> mesh axis (or tuple of mesh axes)."""
+    rules: Dict[str, MeshAxes] = field(default_factory=dict)
+
+    def get(self, name: Optional[str]) -> MeshAxes:
+        if name is None:
+            return None
+        axes = self.rules.get(name, None)
+        if isinstance(axes, list):  # JSON overrides arrive as lists
+            axes = tuple(axes)
+        return axes
+
+    def with_overrides(self, **kw: MeshAxes) -> "ShardingRules":
+        r = dict(self.rules)
+        r.update(kw)
+        return ShardingRules(r)
+
+
+def default_rules(multi_pod: bool = False, pod_role: str = "dp") -> ShardingRules:
+    """The baseline rule set.
+
+    - batch          -> DP over (pod, data)
+    - fsdp           -> parameter reduction dims sharded over "data" (ZeRO-3)
+    - heads/mlp/vocab/expert -> TP/EP over "model"
+    - seq            -> unsharded by default (SP enabled per-shape by overrides)
+    """
+    batch: MeshAxes = ("pod", "data") if (multi_pod and pod_role == "dp") else "data"
+    return ShardingRules({
+        "batch": batch,
+        "seq": None,
+        "seq_sp": None,         # residual-stream seq dim (SP override)
+        "embed": None,          # activation d_model dim
+        "heads": "model",
+        "kv_heads": "model",    # falls back to None when not divisible
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",      # EP
+        "capacity": None,
+        "fsdp": "data",         # weight reduction dim (ZeRO-3 style)
+        "layers": None,         # scan-stacked layer axis
+        "rank": None,           # PEFT subspace dims are tiny -> replicate
+        "state": None,          # SSM state dim
+        "conv_ch": "model",     # SSM conv channels (d_inner + 2GN)
+        "cache_seq": None,      # KV-cache sequence dim (decode override)
+        "stage": "pod" if (multi_pod and pod_role == "pp") else None,
+    })
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def logical_spec(
+    mesh: Mesh,
+    rules: ShardingRules,
+    logical_axes: Sequence[Optional[str]],
+    dims: Optional[Sequence[int]] = None,
+) -> P:
+    """Build a PartitionSpec; drop assignments whose mesh axes don't exist or
+    don't divide the dimension size (when ``dims`` is given)."""
+    out = []
+    used: set = set()
+    for i, name in enumerate(logical_axes):
+        axes = rules.get(name)
+        if axes is None:
+            out.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        if not axes:
+            out.append(None)
+            continue
+        size = _axis_size(mesh, axes)
+        if dims is not None and dims[i] % size != 0:
+            # divisibility fallback: try a prefix of the axes tuple
+            while axes and dims[i] % _axis_size(mesh, axes) != 0:
+                axes = axes[:-1]
+            if not axes:
+                out.append(None)
+                continue
+        used.update(axes)
+        out.append(axes[0] if len(axes) == 1 else axes)
+    return P(*out)
+
+
+def named_sharding(mesh: Mesh, rules: ShardingRules,
+                   logical_axes: Sequence[Optional[str]],
+                   dims: Optional[Sequence[int]] = None) -> NamedSharding:
+    return NamedSharding(mesh, logical_spec(mesh, rules, logical_axes, dims))
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context (used by model code via shard_act)
+# ---------------------------------------------------------------------------
+
+_tls = threading.local()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh], rules: Optional[ShardingRules]):
+    prev = getattr(_tls, "ctx", None)
+    _tls.ctx = (mesh, rules) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def current_rules() -> Optional[Tuple[Mesh, ShardingRules]]:
+    return getattr(_tls, "ctx", None)
+
+
+def shard_act(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain an activation's sharding; no-op outside a mesh context or on a
+    trivial mesh."""
+    ctx = current_rules()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if mesh is None or mesh.size == 1 or len(logical_axes) != x.ndim:
+        return x
+    spec = logical_spec(mesh, rules, logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,4 @@
+from repro.train.trainer import (  # noqa: F401
+    TrainState, init_train_state, make_train_step,
+)
+from repro.train import checkpoint, straggler  # noqa: F401

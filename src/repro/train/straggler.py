@@ -1,0 +1,52 @@
+"""Straggler / anomaly mitigation for long-running multi-pod jobs.
+
+On a real cluster the controller consumes these signals to (a) exclude a slow
+host and trigger an elastic restart from the latest checkpoint, or (b) flag
+data-pipeline stalls.  Here the detector + policy are implemented and unit
+tested; the restart path reuses checkpoint.restore onto the resized mesh.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Deque, List, Optional
+
+
+@dataclass
+class StepTimeMonitor:
+    window: int = 50
+    zscore_threshold: float = 4.0
+    warmup_steps: int = 5
+    on_anomaly: Optional[Callable[[int, float, float], None]] = None
+    _times: Deque[float] = field(default_factory=collections.deque)
+    _step: int = 0
+    anomalies: List[int] = field(default_factory=list)
+
+    def record(self, step_seconds: float) -> bool:
+        """Record one step's wall time; True if flagged as a straggler step."""
+        self._step += 1
+        flagged = False
+        if len(self._times) >= self.warmup_steps:
+            mean = sum(self._times) / len(self._times)
+            var = sum((t - mean) ** 2 for t in self._times) / len(self._times)
+            std = max(var ** 0.5, 1e-6, 0.01 * mean)
+            z = (step_seconds - mean) / std
+            if z > self.zscore_threshold:
+                flagged = True
+                self.anomalies.append(self._step)
+                if self.on_anomaly:
+                    self.on_anomaly(self._step, step_seconds, mean)
+        self._times.append(step_seconds)
+        while len(self._times) > self.window:
+            self._times.popleft()
+        return flagged
+
+
+class Stopwatch:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,87 @@
+"""Chunked (flash-style) attention vs naive oracle; GQA; decode path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention
+
+
+def naive_attention(q, k, v, causal=True):
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bqhgk", qg,
+                        k.astype(jnp.float32)) / jnp.sqrt(d)
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(k.shape[1])[None, :]
+        scores = jnp.where(mask[None, :, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d)
+
+
+@pytest.mark.parametrize("sq,skv,h,kh,qc,kc", [
+    (64, 64, 4, 4, 16, 16),
+    (64, 64, 8, 2, 32, 16),     # GQA
+    (128, 128, 4, 1, 64, 32),   # MQA
+    (32, 128, 4, 4, 32, 32),    # cross (non-causal)
+])
+def test_chunked_vs_naive(sq, skv, h, kh, qc, kc):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, d = 2, 16
+    q = jax.random.normal(keys[0], (b, sq, h, d))
+    k = jax.random.normal(keys[1], (b, skv, kh, d))
+    v = jax.random.normal(keys[2], (b, skv, kh, d))
+    causal = sq == skv
+    got = attention.chunked_attention(q, k, v, causal=causal, q_chunk=qc,
+                                      kv_chunk=kc)
+    want = naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_expand_kv_equivalent():
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    b, s, h, kh, d = 2, 64, 8, 2, 16
+    q = jax.random.normal(keys[0], (b, s, h, d))
+    k = jax.random.normal(keys[1], (b, s, kh, d))
+    v = jax.random.normal(keys[2], (b, s, kh, d))
+    y1 = attention.chunked_attention(q, k, v, expand_kv=False)
+    y2 = attention.chunked_attention(q, k, v, expand_kv=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+def test_decode_matches_full_last_row():
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    b, s, h, kh, d = 2, 32, 4, 2, 16
+    q = jax.random.normal(keys[0], (b, s, h, d))
+    k = jax.random.normal(keys[1], (b, s, kh, d))
+    v = jax.random.normal(keys[2], (b, s, kh, d))
+    full = naive_attention(q, k, v, causal=True)
+    # decode the last position against a padded cache
+    pad = 8
+    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    got = attention.decode_attention(q[:, -1:], kc, vc, cache_len=s)
+    np.testing.assert_allclose(np.asarray(got[:, 0]),
+                               np.asarray(full[:, -1]), atol=2e-5, rtol=2e-5)
+    # expand_kv decode path too
+    got2 = attention.decode_attention(q[:, -1:], kc, vc, cache_len=s,
+                                      expand_kv=True)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(got), atol=1e-6)
+
+
+def test_q_offset_for_incremental_prefill():
+    """Chunked prefill continuation: q_offset shifts the causal mask."""
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    b, s, h, d = 1, 64, 2, 8
+    q = jax.random.normal(keys[0], (b, s, h, d))
+    k = jax.random.normal(keys[1], (b, s, h, d))
+    v = jax.random.normal(keys[2], (b, s, h, d))
+    full = attention.chunked_attention(q, k, v, causal=True)
+    tail = attention.chunked_attention(q[:, 32:], k, v, causal=True,
+                                       q_chunk=32, q_offset=32)
+    np.testing.assert_allclose(np.asarray(tail), np.asarray(full[:, 32:]),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,64 @@
+"""Property tests for the Cayley parameterization (paper Appendix C)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cayley
+
+
+@hypothesis.given(st.integers(2, 48), st.integers(0, 10**6))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_exact_cayley_is_orthogonal(r, seed):
+    q = jax.random.normal(jax.random.PRNGKey(seed),
+                          (cayley.num_skew_params(r),)) * 0.1
+    rot = cayley.cayley_exact(q, r)
+    err = cayley.orthogonality_error(rot)
+    assert float(err) < 1e-4
+
+
+@hypothesis.given(st.integers(2, 32), st.integers(0, 10**6))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_skew_roundtrip(r, seed):
+    flat = jax.random.normal(jax.random.PRNGKey(seed),
+                             (cayley.num_skew_params(r),))
+    q = cayley.skew_from_flat(flat, r)
+    np.testing.assert_allclose(np.asarray(q), -np.asarray(q).T, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(cayley.flat_from_skew(q)),
+                               np.asarray(flat), atol=1e-7)
+
+
+def test_neumann_error_decreases_with_terms():
+    """Fig 8b: more Neumann terms -> closer to exact Cayley."""
+    r = 32
+    q = jax.random.normal(jax.random.PRNGKey(0),
+                          (cayley.num_skew_params(r),)) * 0.03
+    exact = cayley.cayley_exact(q, r)
+    errs = []
+    for k in (1, 2, 3, 5, 8):
+        approx = cayley.cayley_neumann(q, r, k)
+        errs.append(float(jnp.linalg.norm(approx - exact)))
+    assert all(a >= b - 1e-9 for a, b in zip(errs, errs[1:])), errs
+    assert errs[-1] < 1e-2
+
+
+def test_neumann_near_orthogonal_at_k5():
+    """Paper uses K=5: orthogonality error must be small for small ‖Q‖."""
+    r = 64
+    q = jax.random.normal(jax.random.PRNGKey(1),
+                          (cayley.num_skew_params(r),)) * 0.02
+    rot = cayley.cayley_neumann(q, r, 5)
+    assert float(cayley.orthogonality_error(rot)) < 1e-2
+
+
+def test_identity_at_zero():
+    """Training starts exactly at W_pre: Q=0 -> R=I."""
+    r = 16
+    rot = cayley.cayley_neumann(jnp.zeros((cayley.num_skew_params(r),)), r, 5)
+    np.testing.assert_allclose(np.asarray(rot), np.eye(r), atol=1e-7)
+
+
+def test_num_skew_params():
+    assert cayley.num_skew_params(46) == 46 * 45 // 2

@@ -1,0 +1,111 @@
+"""Every PEFT baseline behind the dispatcher: init/apply/merge coherence,
+trainability masks, Table 8 parameter formulas."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import PEFTConfig
+from repro.core import peft
+
+D_IN, D_OUT = 64, 48
+METHODS = ["psoft", "lora", "pissa", "dora", "lora_xs", "oft", "boft",
+           "goft", "qgoft", "none"]
+
+
+def make_cfg(method):
+    return PEFTConfig(method=method, rank=8, oft_block_size=16,
+                      boft_blocks=8, boft_factors=2)
+
+
+def make_params(method, seed=0):
+    cfg = make_cfg(method)
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (D_IN, D_OUT)) * 0.2
+    p = peft.init_linear(key, w, cfg, wrapped=True,
+                         param_dtype=jnp.float32, peft_dtype=jnp.float32)
+    return cfg, w, p
+
+
+def perturb(p, method, scale=0.05):
+    """Move trainables off init so apply != base forward."""
+    out = dict(p)
+    for name in peft.trainable_names(method):
+        k = jax.random.PRNGKey(hash(name) % 2**31)
+        out[name] = p[name] + scale * jax.random.normal(k, p[name].shape)
+    return out
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_init_starts_at_w_pre(method):
+    """All reparameterization methods must start the forward at W_pre."""
+    cfg, w, p = make_params(method)
+    x = jax.random.normal(jax.random.PRNGKey(1), (12, D_IN))
+    y = peft.apply_linear(p, x, cfg, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               atol=5e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_apply_equals_merge(method):
+    cfg, w, p = make_params(method)
+    p = perturb(p, method)
+    x = jax.random.normal(jax.random.PRNGKey(2), (12, D_IN))
+    y1 = peft.apply_linear(p, x, cfg, compute_dtype=jnp.float32)
+    y2 = x @ peft.merge_linear(p, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("method", [m for m in METHODS if m != "none"])
+def test_stored_trainables_match_formula(method):
+    cfg, w, p = make_params(method)
+    stored = sum(int(p[k].size) for k in peft.trainable_names(method)
+                 if k in p)
+    assert stored == peft.count_trainable_params(D_IN, D_OUT, cfg), method
+
+
+def test_count_ordering_matches_paper():
+    """PSOFT must be far below LoRA at equal rank (18x claim territory)."""
+    d, n = 768, 768
+    psoft_n = peft.count_trainable_params(d, n, make_cfg("psoft"))
+    lora_n = peft.count_trainable_params(d, n, make_cfg("lora"))
+    assert psoft_n * 10 < lora_n
+
+
+def test_orthogonal_methods_preserve_column_norms():
+    """OFT-family (strict, before scaling) is isometric on the input space:
+    the rotated weight RW has the same Frobenius norm as W."""
+    for method in ("oft", "boft"):
+        cfg, w, p = make_params(method)
+        p = perturb(p, method, 0.03)  # small Q: Neumann(K=5) ~ exact
+        p["out_scale"] = jnp.ones_like(p["out_scale"])  # undo relaxation
+        merged = peft.merge_linear(p, cfg)
+        wn = float(jnp.linalg.norm(w))
+        assert abs(float(jnp.linalg.norm(merged)) - wn) / wn < 5e-3
+
+
+def test_merge_tree_collapses_all_linears():
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+    cfg = get_config("tiny")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    merged = peft.merge_tree(params, cfg.peft)
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(merged)[0]:
+        name = str(getattr(kp[-1], "key", kp[-1]))
+        assert name not in ("w_res", "A", "B", "q", "alpha", "beta"), kp
+
+
+def test_merged_model_matches_unmerged():
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+    cfg = get_config("tiny")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                          cfg.vocab_size)}
+    logits1 = model_lib.forward_logits(params, batch, cfg)
+    merged = peft.merge_tree(params, cfg.peft)
+    cfg2 = cfg.replace(peft=cfg.peft.replace(method="none"))
+    logits2 = model_lib.forward_logits(merged, batch, cfg2)
+    np.testing.assert_allclose(np.asarray(logits1), np.asarray(logits2),
+                               atol=2e-3, rtol=1e-2)

@@ -1,0 +1,67 @@
+"""Straggler monitor + data pipeline determinism/sharding."""
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLMDataset, prefetch_iterator
+from repro.train.straggler import StepTimeMonitor
+
+
+def test_straggler_flags_outlier():
+    events = []
+    mon = StepTimeMonitor(warmup_steps=5,
+                          on_anomaly=lambda s, t, m: events.append(s))
+    for _ in range(20):
+        mon.record(0.10 + np.random.default_rng(0).normal() * 0.0)
+    assert mon.record(1.5) is True
+    assert len(events) == 1
+    # recovers: normal steps afterwards not flagged
+    assert mon.record(0.10) is False
+
+
+def test_straggler_ignores_warmup():
+    mon = StepTimeMonitor(warmup_steps=5)
+    assert mon.record(99.0) is False  # first step (compile) not flagged
+
+
+def test_data_deterministic():
+    cfg = get_config("tiny")
+    a = SyntheticLMDataset(cfg, 4, 32).batch_at(7)
+    b = SyntheticLMDataset(cfg, 4, 32).batch_at(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticLMDataset(cfg, 4, 32).batch_at(8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_labels_are_next_tokens():
+    cfg = get_config("tiny")
+    b = SyntheticLMDataset(cfg, 2, 16).batch_at(0)
+    # labels[t] is the successor of tokens[t] in the Markov chain: check the
+    # shift property labels[:, :-1] == tokens[:, 1:]
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+def test_host_sharding_disjoint_and_covering():
+    cfg = get_config("tiny")
+    full = SyntheticLMDataset(cfg, 8, 16,
+                              DataConfig(num_hosts=1, host_id=0)).batch_at(3)
+    h0 = SyntheticLMDataset(cfg, 8, 16,
+                            DataConfig(num_hosts=2, host_id=0)).batch_at(3)
+    h1 = SyntheticLMDataset(cfg, 8, 16,
+                            DataConfig(num_hosts=2, host_id=1)).batch_at(3)
+    assert h0["tokens"].shape[0] == 4 and h1["tokens"].shape[0] == 4
+    # different hosts generate different data at the same step
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_prefetch_iterator_order():
+    it = prefetch_iterator(iter(range(10)), depth=3)
+    assert list(it) == list(range(10))
+
+
+def test_modality_extras():
+    vlm = get_config("internvl2-26b").reduced()
+    b = SyntheticLMDataset(vlm, 2, 16).batch_at(0)
+    assert b["patch_embeds"].shape == (2, vlm.num_patch_tokens, vlm.d_model)
+    audio = get_config("seamless-m4t-medium").reduced()
+    b = SyntheticLMDataset(audio, 2, 16).batch_at(0)
+    assert b["src_embeds"].shape == (2, 16, audio.d_model)
