@@ -1,0 +1,52 @@
+"""Registry-dispatch hot path: cost of resolving + applying a PEFT linear.
+
+Two numbers per method:
+
+* ``dispatch_trace`` — un-jitted ``peft.apply_linear`` wall time.  This
+  includes the Python-level registry resolution (``resolve`` -> method
+  object) that runs once per trace; regressions here slow every ``jit``
+  retrace and eager debugging.
+* ``dispatch_jit`` — jitted steady-state, where dispatch must have compiled
+  away entirely (the registry is trace-time only): this should track the raw
+  matmul cost and is the guardrail that the redesign stays zero-overhead at
+  runtime.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, timeit
+from repro.configs.base import PEFTConfig
+from repro.core import peft
+
+
+def main(quick: bool = False):
+    d_in, d_out, tokens = 512, 512, 256
+    methods = ("none", "psoft", "lora") if quick else (
+        "none", "psoft", "lora", "pissa", "dora", "lora_xs", "oft", "boft")
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * 0.02
+    x = jax.random.normal(jax.random.PRNGKey(1), (tokens, d_in), jnp.float32)
+    for m in methods:
+        cfg = PEFTConfig(method=m, rank=16, oft_block_size=32)
+        p = peft.init_linear(key, w, cfg, wrapped=(m != "none"),
+                             param_dtype=jnp.float32, peft_dtype=jnp.float32)
+        eager = lambda: peft.apply_linear(p, x, cfg, jnp.float32)
+        t_tr = timeit(eager, iters=3, warmup=1)
+        jitted = jax.jit(lambda pp, xx: peft.apply_linear(pp, xx, cfg,
+                                                          jnp.float32))
+        t_jit = timeit(jitted, p, x, iters=20, warmup=3)
+        csv_row(f"dispatch_trace_{m}", t_tr * 1e6)
+        csv_row(f"dispatch_jit_{m}", t_jit * 1e6)
+    # resolution alone (per-call python overhead at trace time)
+    cfg = PEFTConfig(method="psoft", rank=16,
+                     target_modules={"q": "psoft", "up": "lora"})
+    p = peft.init_linear(key, w, cfg, True, jnp.float32, jnp.float32,
+                         module="q")
+    from repro.core import registry
+    t_res = timeit(lambda: registry.resolve(p, cfg, module="q"),
+                   iters=200, warmup=20)
+    csv_row("dispatch_resolve_only", t_res * 1e6)
+
+
+if __name__ == "__main__":
+    main()

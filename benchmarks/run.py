@@ -8,31 +8,47 @@
     Fig 4b (training speed)       -> bench_speed
     Tables 2/4/5 (quality proxy)  -> bench_convergence
     beyond-paper kernel fusion    -> bench_kernels
+    registry dispatch hot path    -> bench_dispatch
+
+``--quick`` runs the CI smoke subset (seconds, CPU): the dispatch hot path —
+so PEFT-registry regressions are visible on every push — plus the closed-form
+Table 8 parameter anchors.
 """
+import os
 import sys
 import traceback
 
+# allow both ``python -m benchmarks.run`` and ``python benchmarks/run.py``
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
-def main() -> None:
+
+def main(quick: bool = False) -> None:
     from benchmarks import (bench_activation_memory, bench_convergence,
-                            bench_geometry, bench_kernels, bench_neumann,
-                            bench_params, bench_speed)
-    mods = [bench_params, bench_geometry, bench_neumann, bench_kernels,
-            bench_activation_memory, bench_speed, bench_convergence]
+                            bench_dispatch, bench_geometry, bench_kernels,
+                            bench_neumann, bench_params, bench_speed)
+    if quick:
+        mods = [(bench_params, {}), (bench_dispatch, {"quick": True})]
+    else:
+        mods = [(bench_params, {}), (bench_geometry, {}), (bench_neumann, {}),
+                (bench_kernels, {}), (bench_dispatch, {}),
+                (bench_activation_memory, {}), (bench_speed, {}),
+                (bench_convergence, {})]
     failed = []
-    for mod in mods:
+    for mod, kwargs in mods:
         name = mod.__name__.split(".")[-1]
         print(f"\n=== {name} ===")
         try:
-            mod.main()
+            mod.main(**kwargs)
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             failed.append(name)
     if failed:
         print(f"\nFAILED: {failed}")
         sys.exit(1)
-    print("\nall benchmarks passed")
+    print("\nall benchmarks passed" + (" (quick subset)" if quick else ""))
 
 
 if __name__ == '__main__':
-    main()
+    main(quick="--quick" in sys.argv[1:])

@@ -8,7 +8,8 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Tuple,
+                    Union)
 
 # ---------------------------------------------------------------------------
 # helpers
@@ -35,7 +36,8 @@ PEFT_METHODS = (
     "lora_xs",
     "oft",       # block-diagonal OFTv2 (Cayley-Neumann)
     "boft",      # butterfly OFT
-    "goft",      # Givens-rotation OFT (qGOFT when relaxed)
+    "goft",      # Givens-rotation OFT
+    "qgoft",     # quasi-Givens (relaxed 2x2) OFT
 )
 
 
@@ -51,12 +53,40 @@ class PEFTConfig:
     boft_blocks: int = 8            # b for BOFT
     boft_factors: int = 2           # m for BOFT
     # which logical module names get wrapped ("q","k","v","o","gate","up","down",
-    # "in_proj","out_proj","w1","w2","router")
-    target_modules: Tuple[str, ...] = (
+    # "in_proj","out_proj","w1","w2","router").  Two forms:
+    #   tuple ("q", "up", ...)          — every listed module uses ``method``
+    #   dict  {"q": "psoft", "up": "lora"} — per-module method mixing; any
+    #                                     module not listed stays unwrapped
+    target_modules: Union[Tuple[str, ...], Mapping[str, str]] = (
         "q", "k", "v", "o", "gate", "up", "down", "in_proj", "out_proj",
     )
     # fuse the subspace path with the residual matmul via the Pallas kernel
+    # (a registry capability: only methods with supports_fused_kernel route)
     use_fused_kernel: bool = False
+
+    def method_for(self, module: Optional[str]) -> str:
+        """PEFT method name for one logical module ("none" if unwrapped).
+
+        Single source of truth for config-driven dispatch: the model layer,
+        the trainability mask, the sharding metadata, and merge all resolve a
+        linear's method through here.
+        """
+        if module is None:
+            return self.method
+        tm = self.target_modules
+        if isinstance(tm, Mapping):
+            return tm.get(module, "none")
+        return self.method if module in tm else "none"
+
+    def is_target(self, module: Optional[str]) -> bool:
+        return self.method_for(module) != "none"
+
+    def methods_in_use(self) -> Tuple[str, ...]:
+        """Distinct methods the target map can produce (sans "none")."""
+        tm = self.target_modules
+        if isinstance(tm, Mapping):
+            return tuple(sorted({m for m in tm.values() if m != "none"}))
+        return (self.method,) if (tm and self.method != "none") else ()
 
     def replace(self, **kw) -> "PEFTConfig":
         return dataclasses.replace(self, **kw)

@@ -1,3 +1,4 @@
 # PSOFT (the paper's primary contribution) + every baseline it compares
-# against, behind one dispatcher (repro.core.peft).
-from repro.core import cayley, lora, oft, peft, psoft  # noqa: F401
+# against, as PEFTMethod objects in a pluggable registry (repro.core.registry)
+# fronted by the thin dispatcher shims in repro.core.peft.
+from repro.core import cayley, lora, oft, peft, psoft, registry  # noqa: F401

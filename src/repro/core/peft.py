@@ -1,29 +1,44 @@
-"""PEFT dispatcher: one interface over PSOFT and every baseline.
+"""PEFT dispatcher: thin, registry-backed entry points over PSOFT and every
+baseline.
 
-A "linear" is a param dict whose structure encodes the method:
+The real contract lives in :mod:`repro.core.registry`: each method is one
+:class:`~repro.core.registry.PEFTMethod` object implementing
 
-    none    : {"w"}
-    psoft   : {"w_res","A","B","q"[,"alpha","beta"]}
-    lora/pissa : {"w","a","b"}
-    dora    : {"w","a","b","m"}
-    lora_xs : {"w","a","b","s"}
-    oft     : {"w","q","out_scale"}
-    boft    : {"w","q","out_scale"}        (q has a leading factor axis)
-    goft/qgoft : {"w","theta"} / {"w","g"}
+    init / apply / merge / trainable_names / num_params / logical_axes
 
-The model layer code only ever calls :func:`apply_linear` /
-:func:`init_linear` / :func:`merge_linear`; swapping the PEFT method is a
-config change.
+keyed by name.  This module keeps the historical free-function API
+(:func:`init_linear` / :func:`apply_linear` / :func:`merge_linear` /
+:func:`merge_tree`) as compatibility shims so existing callers keep working,
+and adds config-driven dispatch on top:
+
+* ``method="..."`` picks a registered method explicitly;
+* ``module="q"`` resolves through ``PEFTConfig.method_for`` — with a
+  per-module mapping in ``PEFTConfig.target_modules`` (e.g. ``{"q": "psoft",
+  "up": "lora"}``) different linears of one model can run different methods;
+* with neither, the method is inferred from the param-dict structure via each
+  method's own ``matches`` declaration (legacy behavior, ties broken by
+  ``cfg.method``).
+
+Fused accelerator kernels are a registry *capability*
+(``PEFTMethod.supports_fused_kernel`` + ``fused_apply``); enabling
+``peft.use_fused_kernel`` routes any capable method through its kernel with
+no dispatcher changes.  Swapping or mixing PEFT methods is a config change.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import PEFTConfig
-from repro.core import cayley, lora, oft, psoft
+from repro.core import registry
+
+# re-exported registry surface (canonical home: repro.core.registry)
+PEFTMethod = registry.PEFTMethod
+register_method = registry.register
+get_method = registry.get_method
+available_methods = registry.available_methods
 
 
 def _dt(name: str):
@@ -36,32 +51,18 @@ def _dt(name: str):
 
 def init_linear(key: jax.Array, w_pre: jax.Array, cfg: PEFTConfig,
                 wrapped: bool, param_dtype=jnp.bfloat16,
-                peft_dtype=jnp.float32) -> Dict[str, jax.Array]:
+                peft_dtype=jnp.float32, *, module: Optional[str] = None,
+                method: Optional[str] = None) -> Dict[str, jax.Array]:
     """Build the param dict for one linear given its pre-trained weight."""
-    if not wrapped or cfg.method == "none":
-        return {"w": w_pre.astype(param_dtype)}
-    m = cfg.method
-    if m == "psoft":
-        return psoft.psoft_init(w_pre, cfg.rank, cfg.relax_vectors,
-                                param_dtype, peft_dtype)
-    if m == "lora":
-        return lora.lora_init(key, w_pre, cfg.rank, param_dtype, peft_dtype)
-    if m == "pissa":
-        return lora.pissa_init(w_pre, cfg.rank, param_dtype, peft_dtype)
-    if m == "dora":
-        return lora.dora_init(key, w_pre, cfg.rank, param_dtype, peft_dtype)
-    if m == "lora_xs":
-        return lora.lora_xs_init(w_pre, cfg.rank, param_dtype, peft_dtype)
-    if m == "oft":
-        return oft.oft_init(w_pre, cfg.oft_block_size, param_dtype, peft_dtype)
-    if m == "boft":
-        return oft.boft_init(w_pre, cfg.boft_blocks, cfg.boft_factors,
-                             param_dtype, peft_dtype)
-    if m == "goft":
-        return oft.goft_init(w_pre, False, param_dtype, peft_dtype)
-    if m == "qgoft":
-        return oft.goft_init(w_pre, True, param_dtype, peft_dtype)
-    raise ValueError(f"unknown PEFT method {m!r}")
+    if method is None:
+        if not wrapped:
+            method = "none"
+        elif module is not None:
+            method = cfg.method_for(module)
+        else:
+            method = cfg.method
+    return registry.get_method(method).init(key, w_pre, cfg, param_dtype,
+                                            peft_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -69,170 +70,103 @@ def init_linear(key: jax.Array, w_pre: jax.Array, cfg: PEFTConfig,
 # ---------------------------------------------------------------------------
 
 def apply_linear(params: Dict[str, jax.Array], x: jax.Array, cfg: PEFTConfig,
-                 compute_dtype=jnp.bfloat16) -> jax.Array:
-    if "w_res" in params:     # psoft
-        if cfg.use_fused_kernel and x.ndim == 2:
-            from repro.kernels import ops as kops
-            return kops.psoft_matmul(
-                x, params, neumann_terms=cfg.neumann_terms,
-                compute_dtype=compute_dtype)
-        return psoft.psoft_apply(params, x, cfg.neumann_terms,
-                                 cfg.exact_cayley, compute_dtype)
-    if "m" in params:         # dora
-        return lora.dora_apply(params, x, cfg.lora_alpha / cfg.rank,
-                               compute_dtype)
-    if "s" in params:         # lora_xs
-        return lora.lora_xs_apply(params, x, compute_dtype)
-    if "a" in params:         # lora / pissa (pissa uses unit scaling)
-        scale = 1.0 if cfg.method == "pissa" else cfg.lora_alpha / cfg.rank
-        return lora.lora_apply(params, x, scale, compute_dtype)
-    if "out_scale" in params:  # oft / boft
-        if params["q"].ndim == 3:
-            return oft.boft_apply(params, x, cfg.boft_blocks,
-                                  cfg.neumann_terms, compute_dtype)
-        return oft.oft_apply(params, x, cfg.oft_block_size,
-                             cfg.neumann_terms, compute_dtype)
-    if "theta" in params or "g" in params:  # goft / qgoft
-        return oft.goft_apply(params, x, compute_dtype)
-    return x.astype(compute_dtype) @ params["w"].astype(compute_dtype)
+                 compute_dtype=jnp.bfloat16, *, module: Optional[str] = None,
+                 method: Optional[str] = None) -> jax.Array:
+    m = registry.resolve(params, cfg, module=module, method=method)
+    if cfg.use_fused_kernel and m.supports_fused_kernel and x.ndim == 2:
+        return m.fused_apply(params, x, cfg, compute_dtype)
+    return m.apply(params, x, cfg, compute_dtype)
 
 
 # ---------------------------------------------------------------------------
 # merge (zero-latency serving, paper's reparameterization selling point)
 # ---------------------------------------------------------------------------
 
-def merge_linear(params: Dict[str, jax.Array], cfg: PEFTConfig) -> jax.Array:
-    if "w_res" in params:
-        return psoft.psoft_merge(params, cfg.neumann_terms, cfg.exact_cayley)
-    if "m" in params:
-        return lora.dora_merge(params, cfg.lora_alpha / cfg.rank)
-    if "s" in params:
-        return lora.lora_xs_merge(params)
-    if "a" in params:
-        scale = 1.0 if cfg.method == "pissa" else cfg.lora_alpha / cfg.rank
-        return lora.lora_merge(params, scale)
-    if "out_scale" in params:
-        if params["q"].ndim == 3:
-            return oft.boft_merge(params, cfg.boft_blocks, cfg.neumann_terms)
-        return oft.oft_merge(params, cfg.oft_block_size, cfg.neumann_terms)
-    if "theta" in params or "g" in params:
-        return oft.goft_merge(params)
-    return params["w"]
+def merge_linear(params: Dict[str, jax.Array], cfg: PEFTConfig, *,
+                 module: Optional[str] = None,
+                 method: Optional[str] = None) -> jax.Array:
+    m = registry.resolve(params, cfg, module=module, method=method)
+    return m.merge(params, cfg)
 
 
 # ---------------------------------------------------------------------------
 # trainability + sharding metadata
 # ---------------------------------------------------------------------------
 
-_TRAINABLE = {
-    "psoft": ("q", "alpha", "beta"),
-    "lora": ("a", "b"),
-    "pissa": ("a", "b"),
-    "dora": ("a", "b", "m"),
-    "lora_xs": ("s",),
-    "oft": ("q", "out_scale"),
-    "boft": ("q", "out_scale"),
-    "goft": ("theta",),
-    "qgoft": ("g",),
-    "none": (),
-}
-
-
-def trainable_names(method: str) -> Tuple[str, ...]:
-    return _TRAINABLE[method]
+def trainable_names(method: str,
+                    cfg: Optional[PEFTConfig] = None) -> Tuple[str, ...]:
+    return registry.get_method(method).trainable_names(cfg)
 
 
 def linear_logical_axes(params_or_names, cfg: PEFTConfig,
                         in_axis: Optional[str], out_axis: Optional[str],
+                        *, module: Optional[str] = None,
+                        method: Optional[str] = None,
                         ) -> Dict[str, Tuple[Optional[str], ...]]:
     """Logical sharding axes per param of a linear.
 
     Big (d_in × d_out) tensors shard like the base weight; rank-space tensors
     shard their *wide* dim like the adjoining weight dim and replicate r.
+    Each axis tuple has exactly one entry per (unstacked) param dimension —
+    per-method, via the registry.
     """
-    names = set(params_or_names)
-    ax: Dict[str, Tuple[Optional[str], ...]] = {}
-    for n in names:
-        if n in ("w", "w_res"):
-            ax[n] = (in_axis, out_axis)
-        elif n == "A":
-            ax[n] = (in_axis, "rank")
-        elif n == "B":
-            ax[n] = ("rank", out_axis)
-        elif n == "a":
-            ax[n] = (in_axis, "rank")
-        elif n == "b":
-            ax[n] = ("rank", out_axis)
-        elif n in ("m", "out_scale"):
-            ax[n] = (out_axis,)
-        elif n == "s":
-            ax[n] = ("rank", "rank")
-        elif n == "q":
-            # psoft: flat vec; oft: (blocks, flat); boft: (m, blocks, flat)
-            ax[n] = (None,) * 3  # trimmed below to actual ndim
-        elif n in ("alpha", "beta"):
-            ax[n] = ("rank",)
-        elif n in ("theta", "g"):
-            ax[n] = (None,) * 4
-    return ax
+    if isinstance(params_or_names, dict):
+        m = registry.resolve(params_or_names, cfg, module=module,
+                             method=method)
+        names = set(params_or_names)
+    else:
+        names = set(params_or_names)
+        if method is not None:
+            m = registry.get_method(method)
+        elif module is not None:
+            m = registry.get_method(cfg.method_for(module))
+        else:
+            m = registry.get_method(cfg.method if names != {"w"} else "none")
+    ax = m.logical_axes(cfg, in_axis, out_axis)
+    return {n: ax.get(n, (in_axis, out_axis) if n == "w" else None)
+            for n in names if n in ax or n == "w"}
 
 
 # ---------------------------------------------------------------------------
 # parameter counting (Table 8)
 # ---------------------------------------------------------------------------
 
-def count_trainable_params(d_in: int, d_out: int, cfg: PEFTConfig) -> int:
-    m, r = cfg.method, cfg.rank
-    if m == "psoft":
-        return psoft.psoft_num_params(r, cfg.relax_vectors)
-    if m in ("lora", "pissa"):
-        return lora.lora_num_params(d_in, d_out, r)
-    if m == "dora":
-        return lora.dora_num_params(d_in, d_out, r)
-    if m == "lora_xs":
-        return lora.lora_xs_num_params(r)
-    if m == "oft":
-        return oft.oft_num_params(d_in, d_out, cfg.oft_block_size)
-    if m == "boft":
-        return oft.boft_num_params(d_in, d_out, cfg.boft_blocks,
-                                   cfg.boft_factors)
-    if m == "goft":
-        return int(oft.goft_num_params(d_in, False))
-    if m == "qgoft":
-        return int(oft.goft_num_params(d_in, True))
-    if m == "none":
-        return 0
-    raise ValueError(m)
+def count_trainable_params(d_in: int, d_out: int, cfg: PEFTConfig, *,
+                           module: Optional[str] = None) -> int:
+    method = cfg.method_for(module) if module is not None else cfg.method
+    return registry.get_method(method).num_params(d_in, d_out, cfg)
 
 
 # ---------------------------------------------------------------------------
 # whole-model merge (zero-latency serving)
 # ---------------------------------------------------------------------------
 
-_LINEAR_MARKERS = ("w_res", "a", "s", "out_scale", "theta", "g")
-
-
 def is_peft_linear(node) -> bool:
-    return isinstance(node, dict) and any(k in node for k in _LINEAR_MARKERS)
+    return registry.is_peft_param_dict(node)
 
 
 def merge_tree(params, cfg: PEFTConfig):
     """Recursively collapse every PEFT linear into a plain {"w": W_final}.
 
     Handles stacked (layer/expert) linears by vmapping the merge over leading
-    axes.
+    axes.  The dict key naming a linear is its module name, so per-module
+    method mixing merges correctly.
     """
-    def rec(node):
+    def rec(node, path):
         if is_peft_linear(node):
-            ref = node["w_res"] if "w_res" in node else node["w"]
+            module = path[-1] if path else None
+            # base weight (for the stacking depth), whatever the method
+            ref = node.get("w_res")
+            if ref is None:
+                ref = node["w"]
             extra = ref.ndim - 2
-            fn = lambda p: {"w": merge_linear(p, cfg)}
+            fn = lambda p: {"w": merge_linear(p, cfg, module=module)}
             for _ in range(extra):
                 fn = jax.vmap(fn)
             return fn(node)
         if isinstance(node, dict):
-            return {k: rec(v) for k, v in node.items()}
+            return {k: rec(v, path + (k,)) for k, v in node.items()}
         if isinstance(node, list):
-            return [rec(v) for v in node]
+            return [rec(v, path + (str(i),)) for i, v in enumerate(node)]
         return node
-    return rec(params)
+    return rec(params, ())

@@ -1,0 +1,430 @@
+"""First-class PEFT method registry.
+
+Every reparameterization method the framework knows (PSOFT and the baselines
+it is measured against) is one :class:`PEFTMethod` object registered by name.
+A method owns the full adapter lifecycle for a single linear layer:
+
+    init            decompose / allocate the param dict for one W_pre
+    apply           low-rank(-ish) forward  y = f(params, x)
+    merge           collapse back to a plain weight (zero-latency serving)
+    trainable_names which param keys the optimizer may touch
+    num_params      trainable-parameter formula (paper Table 8)
+    logical_axes    per-param logical sharding axes, one entry per array dim
+
+Dispatch is *config-driven*: callers say which method a linear uses (directly
+or via ``PEFTConfig.method_for(module)``); the param-dict structure is only
+consulted as a legacy fallback through :meth:`PEFTMethod.matches`, which each
+method declares itself — there is no central key-sniffing ladder.
+
+Capability flags ride on the method object.  ``supports_fused_kernel`` marks
+methods with a fused Pallas forward (:mod:`repro.kernels.ops`); the model
+layer routes through :meth:`PEFTMethod.fused_apply` when the config enables
+it, so new kernels plug in without touching the dispatcher.
+
+Registering a third-party method is ~30 lines — see ``docs/adapter_api.md``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cayley, lora, oft, psoft
+
+Axes = Tuple[Optional[str], ...]
+
+
+class PEFTMethod:
+    """Base class / protocol for one PEFT method.
+
+    Subclass, set :attr:`name`, implement the lifecycle hooks, and call
+    :func:`register`.  ``cfg`` everywhere is a :class:`PEFTConfig` (duck-typed
+    to avoid an import cycle); methods read only their own hyperparameters
+    from it.
+    """
+
+    #: registry key, e.g. "psoft"
+    name: str = ""
+    #: param keys whose presence marks a dict as this method's (legacy
+    #: structure inference + ``is_peft_linear``); "w"-only dicts never match.
+    marker_keys: Tuple[str, ...] = ()
+    #: param key holding the (d_in, d_out) base weight
+    base_key: str = "w"
+    #: set True when :meth:`fused_apply` routes to a fused accelerator kernel
+    supports_fused_kernel: bool = False
+
+    # -- lifecycle ---------------------------------------------------------
+    def init(self, key: jax.Array, w_pre: jax.Array, cfg, param_dtype,
+             peft_dtype) -> Dict[str, jax.Array]:
+        raise NotImplementedError
+
+    def apply(self, params: Dict[str, jax.Array], x: jax.Array, cfg,
+              compute_dtype) -> jax.Array:
+        raise NotImplementedError
+
+    def fused_apply(self, params: Dict[str, jax.Array], x: jax.Array, cfg,
+                    compute_dtype) -> jax.Array:
+        raise NotImplementedError(
+            f"method {self.name!r} has no fused kernel "
+            f"(supports_fused_kernel={self.supports_fused_kernel})")
+
+    def merge(self, params: Dict[str, jax.Array], cfg) -> jax.Array:
+        raise NotImplementedError
+
+    # -- metadata ----------------------------------------------------------
+    def trainable_names(self, cfg=None) -> Tuple[str, ...]:
+        return ()
+
+    def num_params(self, d_in: int, d_out: int, cfg) -> int:
+        return 0
+
+    def logical_axes(self, cfg, in_axis: Optional[str],
+                     out_axis: Optional[str]) -> Dict[str, Axes]:
+        """Per-param logical sharding axes.
+
+        MUST return one entry per param :meth:`init` can emit, with
+        ``len(axes) == param.ndim`` for the *unstacked* param (leading
+        layer/expert stack dims are padded by the model's ``param_axes``).
+        """
+        return {"w": (in_axis, out_axis)}
+
+    # -- structure matching (legacy dispatch fallback) ---------------------
+    def matches(self, params: Dict) -> bool:
+        """Does this (unstacked) param dict look like ours?  Shape-aware
+        refinements (e.g. OFT vs BOFT factor axis) go in overrides."""
+        if not self.marker_keys:
+            return set(params) == {"w"}
+        return all(k in params for k in self.marker_keys)
+
+
+# ---------------------------------------------------------------------------
+# registry proper
+# ---------------------------------------------------------------------------
+
+_METHODS: Dict[str, PEFTMethod] = {}
+
+
+def register(method: PEFTMethod, override: bool = False) -> PEFTMethod:
+    """Register a method instance under ``method.name``."""
+    if not method.name:
+        raise ValueError("PEFTMethod.name must be a non-empty string")
+    if method.name in _METHODS and not override:
+        raise ValueError(
+            f"PEFT method {method.name!r} is already registered "
+            f"(pass override=True to replace it)")
+    _METHODS[method.name] = method
+    return method
+
+
+def get_method(name: str) -> PEFTMethod:
+    try:
+        return _METHODS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown PEFT method {name!r}; registered methods: "
+            f"{available_methods()}") from None
+
+
+def available_methods() -> List[str]:
+    return sorted(_METHODS)
+
+
+def linear_markers() -> Tuple[str, ...]:
+    """Union of all registered marker keys — identifies PEFT linears."""
+    out: List[str] = []
+    for m in _METHODS.values():
+        for k in m.marker_keys:
+            if k not in out:
+                out.append(k)
+    return tuple(out)
+
+
+def is_peft_param_dict(node) -> bool:
+    return isinstance(node, dict) and any(k in node for k in linear_markers())
+
+
+def infer_method(params: Dict, hint: Optional[str] = None) -> PEFTMethod:
+    """Structure-driven fallback for callers that predate config dispatch.
+
+    When several methods share a param signature (LoRA vs PiSSA), ``hint``
+    (usually ``cfg.method`` or a per-module resolution) breaks the tie.
+    """
+    candidates = [m for m in _METHODS.values() if m.matches(params)]
+    if not candidates:
+        raise ValueError(
+            f"param dict with keys {sorted(params)} matches no registered "
+            f"PEFT method ({available_methods()})")
+    if hint is not None:
+        for m in candidates:
+            if m.name == hint:
+                return m
+    return candidates[0]
+
+
+def resolve(params: Dict, cfg, module: Optional[str] = None,
+            method: Optional[str] = None) -> PEFTMethod:
+    """Pick the method for one linear: explicit name > config(module) >
+    structure inference.  A config-resolved method that does not match the
+    param structure (e.g. an already-merged tree) falls back to inference."""
+    if method is not None:
+        return get_method(method)
+    if module is not None and hasattr(cfg, "method_for"):
+        m = get_method(cfg.method_for(module))
+        if m.matches(params):
+            return m
+        return infer_method(params, hint=getattr(cfg, "method", None))
+    return infer_method(params, hint=getattr(cfg, "method", None))
+
+
+# ---------------------------------------------------------------------------
+# the nine seed methods (+ "none")
+# ---------------------------------------------------------------------------
+
+
+class NoneMethod(PEFTMethod):
+    name = "none"
+
+    def init(self, key, w_pre, cfg, param_dtype, peft_dtype):
+        return {"w": w_pre.astype(param_dtype)}
+
+    def apply(self, params, x, cfg, compute_dtype):
+        return x.astype(compute_dtype) @ params["w"].astype(compute_dtype)
+
+    def merge(self, params, cfg):
+        return params["w"]
+
+
+class PSOFTMethod(PEFTMethod):
+    name = "psoft"
+    marker_keys = ("w_res",)
+    base_key = "w_res"
+    supports_fused_kernel = True
+
+    def init(self, key, w_pre, cfg, param_dtype, peft_dtype):
+        return psoft.psoft_init(w_pre, cfg.rank, cfg.relax_vectors,
+                                param_dtype, peft_dtype)
+
+    def apply(self, params, x, cfg, compute_dtype):
+        return psoft.psoft_apply(params, x, cfg.neumann_terms,
+                                 cfg.exact_cayley, compute_dtype)
+
+    def fused_apply(self, params, x, cfg, compute_dtype):
+        from repro.kernels import ops as kops
+        return kops.psoft_matmul(x, params, neumann_terms=cfg.neumann_terms,
+                                 compute_dtype=compute_dtype)
+
+    def merge(self, params, cfg):
+        return psoft.psoft_merge(params, cfg.neumann_terms, cfg.exact_cayley)
+
+    def trainable_names(self, cfg=None):
+        if cfg is not None and not cfg.relax_vectors:
+            return ("q",)
+        return ("q", "alpha", "beta")
+
+    def num_params(self, d_in, d_out, cfg):
+        return psoft.psoft_num_params(cfg.rank, cfg.relax_vectors)
+
+    def logical_axes(self, cfg, in_axis, out_axis):
+        return {"w_res": (in_axis, out_axis), "A": (in_axis, "rank"),
+                "B": ("rank", out_axis), "q": (None,),
+                "alpha": ("rank",), "beta": ("rank",)}
+
+
+class LoRAMethod(PEFTMethod):
+    name = "lora"
+    marker_keys = ("a", "b")
+
+    def _scale(self, cfg):
+        return cfg.lora_alpha / cfg.rank
+
+    def matches(self, params):
+        return ("a" in params and "b" in params and "m" not in params
+                and "s" not in params and "w_res" not in params)
+
+    def init(self, key, w_pre, cfg, param_dtype, peft_dtype):
+        return lora.lora_init(key, w_pre, cfg.rank, param_dtype, peft_dtype)
+
+    def apply(self, params, x, cfg, compute_dtype):
+        return lora.lora_apply(params, x, self._scale(cfg), compute_dtype)
+
+    def merge(self, params, cfg):
+        return lora.lora_merge(params, self._scale(cfg))
+
+    def trainable_names(self, cfg=None):
+        return ("a", "b")
+
+    def num_params(self, d_in, d_out, cfg):
+        return lora.lora_num_params(d_in, d_out, cfg.rank)
+
+    def logical_axes(self, cfg, in_axis, out_axis):
+        return {"w": (in_axis, out_axis), "a": (in_axis, "rank"),
+                "b": ("rank", out_axis)}
+
+
+class PiSSAMethod(LoRAMethod):
+    name = "pissa"
+
+    def _scale(self, cfg):
+        return 1.0  # principal factors are trained directly, unit scaling
+
+    def init(self, key, w_pre, cfg, param_dtype, peft_dtype):
+        return lora.pissa_init(w_pre, cfg.rank, param_dtype, peft_dtype)
+
+
+class DoRAMethod(LoRAMethod):
+    name = "dora"
+    marker_keys = ("a", "b", "m")
+
+    def _scale(self, cfg):
+        return cfg.lora_alpha / cfg.rank
+
+    def matches(self, params):
+        return "m" in params and "a" in params
+
+    def init(self, key, w_pre, cfg, param_dtype, peft_dtype):
+        return lora.dora_init(key, w_pre, cfg.rank, param_dtype, peft_dtype)
+
+    def apply(self, params, x, cfg, compute_dtype):
+        return lora.dora_apply(params, x, self._scale(cfg), compute_dtype)
+
+    def merge(self, params, cfg):
+        return lora.dora_merge(params, self._scale(cfg))
+
+    def trainable_names(self, cfg=None):
+        return ("a", "b", "m")
+
+    def num_params(self, d_in, d_out, cfg):
+        return lora.dora_num_params(d_in, d_out, cfg.rank)
+
+    def logical_axes(self, cfg, in_axis, out_axis):
+        ax = super().logical_axes(cfg, in_axis, out_axis)
+        ax["m"] = (out_axis,)
+        return ax
+
+
+class LoRAXSMethod(PEFTMethod):
+    name = "lora_xs"
+    marker_keys = ("s",)
+
+    def matches(self, params):
+        return "s" in params and "a" in params
+
+    def init(self, key, w_pre, cfg, param_dtype, peft_dtype):
+        return lora.lora_xs_init(w_pre, cfg.rank, param_dtype, peft_dtype)
+
+    def apply(self, params, x, cfg, compute_dtype):
+        return lora.lora_xs_apply(params, x, compute_dtype)
+
+    def merge(self, params, cfg):
+        return lora.lora_xs_merge(params)
+
+    def trainable_names(self, cfg=None):
+        return ("s",)
+
+    def num_params(self, d_in, d_out, cfg):
+        return lora.lora_xs_num_params(cfg.rank)
+
+    def logical_axes(self, cfg, in_axis, out_axis):
+        return {"w": (in_axis, out_axis), "a": (in_axis, "rank"),
+                "b": ("rank", out_axis), "s": ("rank", "rank")}
+
+
+class OFTMethod(PEFTMethod):
+    name = "oft"
+    marker_keys = ("out_scale",)
+
+    def matches(self, params):
+        return ("out_scale" in params and "q" in params
+                and params["q"].ndim == 2)
+
+    def init(self, key, w_pre, cfg, param_dtype, peft_dtype):
+        return oft.oft_init(w_pre, cfg.oft_block_size, param_dtype,
+                            peft_dtype)
+
+    def apply(self, params, x, cfg, compute_dtype):
+        return oft.oft_apply(params, x, cfg.oft_block_size, cfg.neumann_terms,
+                             compute_dtype)
+
+    def merge(self, params, cfg):
+        return oft.oft_merge(params, cfg.oft_block_size, cfg.neumann_terms)
+
+    def trainable_names(self, cfg=None):
+        return ("q", "out_scale")
+
+    def num_params(self, d_in, d_out, cfg):
+        return oft.oft_num_params(d_in, d_out, cfg.oft_block_size)
+
+    def logical_axes(self, cfg, in_axis, out_axis):
+        return {"w": (in_axis, out_axis), "q": ("oft_blocks", None),
+                "out_scale": (out_axis,)}
+
+
+class BOFTMethod(OFTMethod):
+    name = "boft"
+
+    def matches(self, params):
+        return ("out_scale" in params and "q" in params
+                and params["q"].ndim == 3)
+
+    def init(self, key, w_pre, cfg, param_dtype, peft_dtype):
+        return oft.boft_init(w_pre, cfg.boft_blocks, cfg.boft_factors,
+                             param_dtype, peft_dtype)
+
+    def apply(self, params, x, cfg, compute_dtype):
+        return oft.boft_apply(params, x, cfg.boft_blocks, cfg.neumann_terms,
+                              compute_dtype)
+
+    def merge(self, params, cfg):
+        return oft.boft_merge(params, cfg.boft_blocks, cfg.neumann_terms)
+
+    def num_params(self, d_in, d_out, cfg):
+        return oft.boft_num_params(d_in, d_out, cfg.boft_blocks,
+                                   cfg.boft_factors)
+
+    def logical_axes(self, cfg, in_axis, out_axis):
+        return {"w": (in_axis, out_axis), "q": (None, "oft_blocks", None),
+                "out_scale": (out_axis,)}
+
+
+class GOFTMethod(PEFTMethod):
+    name = "goft"
+    marker_keys = ("theta",)
+    quasi = False
+
+    def init(self, key, w_pre, cfg, param_dtype, peft_dtype):
+        return oft.goft_init(w_pre, self.quasi, param_dtype, peft_dtype)
+
+    def apply(self, params, x, cfg, compute_dtype):
+        return oft.goft_apply(params, x, compute_dtype)
+
+    def merge(self, params, cfg):
+        return oft.goft_merge(params)
+
+    def trainable_names(self, cfg=None):
+        return ("theta",)
+
+    def num_params(self, d_in, d_out, cfg):
+        return int(oft.goft_num_params(d_in, self.quasi))
+
+    def logical_axes(self, cfg, in_axis, out_axis):
+        return {"w": (in_axis, out_axis), "theta": (None, None)}
+
+
+class QGOFTMethod(GOFTMethod):
+    name = "qgoft"
+    marker_keys = ("g",)
+    quasi = True
+
+    def trainable_names(self, cfg=None):
+        return ("g",)
+
+    def logical_axes(self, cfg, in_axis, out_axis):
+        return {"w": (in_axis, out_axis), "g": (None, None, None, None)}
+
+
+for _m in (NoneMethod(), PSOFTMethod(), LoRAMethod(), PiSSAMethod(),
+           DoRAMethod(), LoRAXSMethod(), OFTMethod(), BOFTMethod(),
+           GOFTMethod(), QGOFTMethod()):
+    register(_m)
+del _m

@@ -2,8 +2,11 @@
 
 Handles: interpret-mode fallback on CPU (this container), shape padding to
 block multiples, building R from the stored skew parameters, and optional α/β
-defaults.  The model layer calls these through the PEFT dispatcher when
-``peft.use_fused_kernel`` is set.
+defaults.  The fused forward is a *registry capability*: a
+:class:`repro.core.registry.PEFTMethod` that sets ``supports_fused_kernel``
+routes through its ``fused_apply`` (which calls into this module) whenever
+``peft.use_fused_kernel`` is enabled — the dispatcher has no kernel-specific
+branches.
 """
 from __future__ import annotations
 

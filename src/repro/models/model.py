@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import peft as peft_lib
+from repro.core import peft as peft_lib, registry as peft_registry
 from repro.models import attention, layers, moe as moe_lib, ssm as ssm_lib
 from repro.sharding import current_rules, shard_act
 
@@ -56,7 +56,7 @@ def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None,
     def lin(k1, k2, d_in, d_out, name):
         w = layers.truncated_normal_init(k1, (d_in, d_out), jnp.float32)
         return peft_lib.init_linear(k2, w, cfg.peft, name in targets,
-                                    param_dtype, peft_dtype)
+                                    param_dtype, peft_dtype, module=name)
 
     p = {"up": lin(keys[0], keys[1], d, f, "up"),
          "down": lin(keys[2], keys[3], f, d, "down")}
@@ -68,14 +68,17 @@ def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None,
 def mlp_apply(params: Dict, x: jax.Array, cfg: ModelConfig,
               compute_dtype) -> jax.Array:
     act = layers.mlp_activation(cfg.mlp_type)
-    up = peft_lib.apply_linear(params["up"], x, cfg.peft, compute_dtype)
+    up = peft_lib.apply_linear(params["up"], x, cfg.peft, compute_dtype,
+                               module="up")
     if "gate" in params:
-        g = peft_lib.apply_linear(params["gate"], x, cfg.peft, compute_dtype)
+        g = peft_lib.apply_linear(params["gate"], x, cfg.peft, compute_dtype,
+                                  module="gate")
         h = act(g.astype(jnp.float32)).astype(compute_dtype) * up
     else:
         h = act(up.astype(jnp.float32)).astype(compute_dtype)
     h = shard_act(h, ("batch", "seq", "mlp"))
-    return peft_lib.apply_linear(params["down"], h, cfg.peft, compute_dtype)
+    return peft_lib.apply_linear(params["down"], h, cfg.peft, compute_dtype,
+                                 module="down")
 
 
 # ---------------------------------------------------------------------------
@@ -93,7 +96,7 @@ def attn_init(key, cfg: ModelConfig, d_in: Optional[int] = None,
     def lin(k1, k2, di, do, name):
         w = layers.truncated_normal_init(k1, (di, do), jnp.float32)
         return peft_lib.init_linear(k2, w, cfg.peft, name in targets,
-                                    param_dtype, peft_dtype)
+                                    param_dtype, peft_dtype, module=name)
 
     return {
         "q": lin(keys[0], keys[1], d, h * hd, "q"),
@@ -107,9 +110,12 @@ def attn_qkv(params, x, cfg: ModelConfig, compute_dtype, kv_input=None,
              positions=None, use_rope=True):
     h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     kv_in = x if kv_input is None else kv_input
-    q = peft_lib.apply_linear(params["q"], x, cfg.peft, compute_dtype)
-    k = peft_lib.apply_linear(params["k"], kv_in, cfg.peft, compute_dtype)
-    v = peft_lib.apply_linear(params["v"], kv_in, cfg.peft, compute_dtype)
+    q = peft_lib.apply_linear(params["q"], x, cfg.peft, compute_dtype,
+                              module="q")
+    k = peft_lib.apply_linear(params["k"], kv_in, cfg.peft, compute_dtype,
+                              module="k")
+    v = peft_lib.apply_linear(params["v"], kv_in, cfg.peft, compute_dtype,
+                              module="v")
     q = q.reshape(*x.shape[:-1], h, hd)
     k = k.reshape(*kv_in.shape[:-1], kh, hd)
     v = v.reshape(*kv_in.shape[:-1], kh, hd)
@@ -142,7 +148,8 @@ def attn_apply(params, x, cfg: ModelConfig, compute_dtype, causal=True,
     out = attention.chunked_attention(q, k, v, causal=causal,
                                       expand_kv=_expand_kv_flag(cfg))
     out = out.reshape(*x.shape[:-1], -1)
-    y = peft_lib.apply_linear(params["o"], out, cfg.peft, compute_dtype)
+    y = peft_lib.apply_linear(params["o"], out, cfg.peft, compute_dtype,
+                              module="o")
     return (y, new_cache) if cache is not None else y
 
 
@@ -152,7 +159,8 @@ def attn_decode(params, x_t, cache: Dict, pos, cfg: ModelConfig,
     h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     b = x_t.shape[0]
     if cross_cache is not None:
-        q = peft_lib.apply_linear(params["q"], x_t, cfg.peft, compute_dtype)
+        q = peft_lib.apply_linear(params["q"], x_t, cfg.peft, compute_dtype,
+                                  module="q")
         q = q.reshape(b, 1, h, hd)
         out = attention.decode_attention(q, cross_cache["k"],
                                          cross_cache["v"],
@@ -160,10 +168,13 @@ def attn_decode(params, x_t, cache: Dict, pos, cfg: ModelConfig,
                                          expand_kv=_expand_kv_flag(cfg))
         out = out.reshape(b, 1, -1)
         return peft_lib.apply_linear(params["o"], out, cfg.peft,
-                                     compute_dtype), cache
-    q = peft_lib.apply_linear(params["q"], x_t, cfg.peft, compute_dtype)
-    k = peft_lib.apply_linear(params["k"], x_t, cfg.peft, compute_dtype)
-    v = peft_lib.apply_linear(params["v"], x_t, cfg.peft, compute_dtype)
+                                     compute_dtype, module="o"), cache
+    q = peft_lib.apply_linear(params["q"], x_t, cfg.peft, compute_dtype,
+                              module="q")
+    k = peft_lib.apply_linear(params["k"], x_t, cfg.peft, compute_dtype,
+                              module="k")
+    v = peft_lib.apply_linear(params["v"], x_t, cfg.peft, compute_dtype,
+                              module="v")
     q = q.reshape(b, 1, h, hd)
     k = k.reshape(b, 1, kh, hd)
     v = v.reshape(b, 1, kh, hd)
@@ -178,7 +189,8 @@ def attn_decode(params, x_t, cache: Dict, pos, cfg: ModelConfig,
     out = attention.decode_attention(q, k_cache, v_cache, pos + 1,
                                      expand_kv=_expand_kv_flag(cfg))
     out = out.reshape(b, 1, -1)
-    y = peft_lib.apply_linear(params["o"], out, cfg.peft, compute_dtype)
+    y = peft_lib.apply_linear(params["o"], out, cfg.peft, compute_dtype,
+                              module="o")
     return y, {"k": k_cache, "v": v_cache}
 
 
@@ -280,7 +292,8 @@ def shared_block_init(key, cfg: ModelConfig) -> Dict:
 def shared_block_apply(params, x, h0, cfg, compute_dtype, positions=None,
                        cache=None):
     inp = jnp.concatenate([x, h0], axis=-1)
-    inp = peft_lib.apply_linear(params["fuse"], inp, cfg.peft, compute_dtype)
+    inp = peft_lib.apply_linear(params["fuse"], inp, cfg.peft, compute_dtype,
+                                module="fuse")
     if cache is not None:
         y, aux, new_cache = block_apply(params["block"], inp, cfg,
                                         compute_dtype, positions=positions,
@@ -293,7 +306,8 @@ def shared_block_apply(params, x, h0, cfg, compute_dtype, positions=None,
 
 def shared_block_decode(params, x_t, h0_t, cache, pos, cfg, compute_dtype):
     inp = jnp.concatenate([x_t, h0_t], axis=-1)
-    inp = peft_lib.apply_linear(params["fuse"], inp, cfg.peft, compute_dtype)
+    inp = peft_lib.apply_linear(params["fuse"], inp, cfg.peft, compute_dtype,
+                                module="fuse")
     y, new_cache = block_decode(params["block"], inp, cache, pos, cfg,
                                 compute_dtype)
     return x_t + y, new_cache
@@ -335,8 +349,8 @@ def init_params(key: jax.Array, cfg: ModelConfig) -> Dict:
         def one(k):
             return ssm_lib.mamba_block_init(
                 k, cfg, param_dtype, _dt(cfg.peft_dtype),
-                "in_proj" in cfg.peft.target_modules,
-                "out_proj" in cfg.peft.target_modules)
+                cfg.peft.is_target("in_proj"),
+                cfg.peft.is_target("out_proj"))
         stack = jax.vmap(lambda k: {"ssm": one(k), "ln": layers.norm_init(
             cfg.d_model, cfg.norm_type, param_dtype)})
         p["layers"] = stack(jax.random.split(keys[2], cfg.num_layers))
@@ -348,8 +362,8 @@ def init_params(key: jax.Array, cfg: ModelConfig) -> Dict:
             if ch == "M":
                 p["layers"].append({"ssm": ssm_lib.mamba_block_init(
                     lkeys[i], cfg, param_dtype, _dt(cfg.peft_dtype),
-                    "in_proj" in cfg.peft.target_modules,
-                    "out_proj" in cfg.peft.target_modules),
+                    cfg.peft.is_target("in_proj"),
+                    cfg.peft.is_target("out_proj")),
                     "ln": layers.norm_init(cfg.d_model, cfg.norm_type,
                                            param_dtype)})
             else:
@@ -613,9 +627,9 @@ def prefill(params, batch: Dict, cfg: ModelConfig, max_len: int,
 
         def cross_kv(lp):
             k = peft_lib.apply_linear(lp["cross"]["k"], enc_out, cfg.peft,
-                                      compute_dtype)
+                                      compute_dtype, module="k")
             v = peft_lib.apply_linear(lp["cross"]["v"], enc_out, cfg.peft,
-                                      compute_dtype)
+                                      compute_dtype, module="v")
             return {"k": k.reshape(*enc_out.shape[:-1], kh, hd),
                     "v": v.reshape(*enc_out.shape[:-1], kh, hd)}
         cross = jax.vmap(cross_kv)(params["layers"])
@@ -755,9 +769,19 @@ def decode_step(params, batch: Dict, cache: PyTree, pos, cfg: ModelConfig,
 
 _COL_PAR = {"q", "k", "v", "gate", "up", "in_proj", "fuse", "router"}
 _ROW_PAR = {"o", "down", "out_proj"}
+_MODULE_NAMES = _COL_PAR | _ROW_PAR
 
 
-def _leaf_role_axes(path: Tuple[str, ...], leaf) -> Tuple:
+def _module_of(names: Tuple[str, ...]) -> Optional[str]:
+    """Innermost logical-module name on a param path (leaf name excluded —
+    PSOFT's "q" param would otherwise shadow the "q" projection module)."""
+    for n in reversed(names[:-1]):
+        if n in _MODULE_NAMES:
+            return n
+    return None
+
+
+def _leaf_role_axes(path: Tuple[str, ...], leaf, cfg: ModelConfig) -> Tuple:
     names = [p for p in path]
     leaf_name = names[-1]
     module = names[-2] if len(names) >= 2 else ""
@@ -772,28 +796,26 @@ def _leaf_role_axes(path: Tuple[str, ...], leaf) -> Tuple:
         return (None,) * 1
     if leaf_name == "conv_w":
         return (None, None)
-    # linear param roles
-    direction = "col"
-    for n in reversed(names):
-        if n in _COL_PAR:
-            direction = "col"
-            break
-        if n in _ROW_PAR:
-            direction = "row"
-            break
+    # PEFT-linear params: direction from the module role, per-param axes from
+    # the module's registered method (per-module mixing resolves here too)
+    lin_module = _module_of(tuple(names))
+    direction = "row" if lin_module in _ROW_PAR else "col"
     in_ax, out_ax = (("fsdp", "tensor") if direction == "col"
                      else ("tensor", "fsdp"))
-    role = {
-        "w": (in_ax, out_ax), "w_res": (in_ax, out_ax),
-        "A": (in_ax, None), "a": (in_ax, None),
-        "B": (None, out_ax), "b": (None, out_ax),
-        "s": (None, None), "m": (out_ax,), "out_scale": (out_ax,),
-        "q": (None,), "alpha": (None,), "beta": (None,),
-        "theta": (None, None), "g": (None, None, None, None),
-    }
-    if leaf_name not in role:
-        return (None,) * leaf.ndim
-    return role[leaf_name]
+    method = cfg.peft.method_for(lin_module) if lin_module else "none"
+    role = peft_registry.get_method(method).logical_axes(cfg.peft, in_ax,
+                                                         out_ax)
+    if leaf_name in role:
+        return role[leaf_name]
+    if leaf_name == "w":   # plain / merged linear under a PEFT-enabled config
+        return (in_ax, out_ax)
+    # param tree and config disagree (e.g. foreign checkpoint): fall back to
+    # any registered method that knows this param name at this rank
+    for m in peft_registry.available_methods():
+        ax = peft_registry.get_method(m).logical_axes(cfg.peft, in_ax, out_ax)
+        if leaf_name in ax and len(ax[leaf_name]) <= leaf.ndim:
+            return ax[leaf_name]
+    return (None,) * leaf.ndim
 
 
 def _path_names(kp) -> Tuple[str, ...]:
@@ -839,7 +861,7 @@ def param_axes(cfg: ModelConfig, params: PyTree) -> PyTree:
     trees from jax.eval_shape).  Leaves are LogicalAxes (atomic)."""
     def assign(kp, leaf):
         names = _path_names(kp)
-        role = _leaf_role_axes(names, leaf)
+        role = _leaf_role_axes(names, leaf, cfg)
         extra = leaf.ndim - len(role)
         if extra < 0:
             return LogicalAxes((None,) * leaf.ndim)
@@ -855,13 +877,16 @@ def param_axes(cfg: ModelConfig, params: PyTree) -> PyTree:
 
 def trainable_mask(cfg: ModelConfig, params: PyTree,
                    full_finetune: bool = False) -> PyTree:
-    trainable = set(peft_lib.trainable_names(cfg.peft.method))
-
+    """Per-leaf trainability, resolved per module through the registry so a
+    mixed target map (e.g. attention on psoft, MLP on lora_xs) freezes exactly
+    the keys each module's method declares frozen."""
     def assign(kp, leaf):
         if full_finetune:
             return True
         names = _path_names(kp)
-        return names[-1] in trainable
+        module = _module_of(names)
+        method = cfg.peft.method_for(module) if module else "none"
+        return names[-1] in peft_lib.trainable_names(method, cfg.peft)
     return jax.tree_util.tree_map_with_path(assign, params)
 
 
@@ -910,12 +935,13 @@ def rewrap_peft(merged_params: PyTree, cfg: ModelConfig) -> PyTree:
                 hasattr(node["w"], "ndim") and node["w"].ndim >= 2 and \
                 path and path[-1] in (_COL_PAR | _ROW_PAR):
             w = node["w"]
-            wrapped = path[-1] in cfg.peft.target_modules
+            module = path[-1]
+            wrapped = cfg.peft.is_target(module)
 
             def init_one(wmat):
                 return peft_lib.init_linear(
                     jax.random.PRNGKey(0), wmat, cfg.peft, wrapped,
-                    _dt(cfg.param_dtype), _dt(cfg.peft_dtype))
+                    _dt(cfg.param_dtype), _dt(cfg.peft_dtype), module=module)
             fn = init_one
             for _ in range(w.ndim - 2):
                 fn = jax.vmap(fn)

@@ -45,10 +45,12 @@ def _group_count(t: int) -> int:
     return max(g, 1)
 
 
-def apply_linear_stacked(params: Dict, x: jax.Array, cfg, compute_dtype):
+def apply_linear_stacked(params: Dict, x: jax.Array, cfg, compute_dtype,
+                         module=None):
     """vmap a PEFT linear over a leading (expert) axis of params AND x."""
     return jax.vmap(
-        lambda p, xx: peft_lib.apply_linear(p, xx, cfg, compute_dtype)
+        lambda p, xx: peft_lib.apply_linear(p, xx, cfg, compute_dtype,
+                                            module=module)
     )(params, x)
 
 
@@ -63,7 +65,8 @@ def moe_init(key, cfg: ModelConfig, param_dtype, peft_dtype,
         ws = jax.vmap(lambda kk: layers.truncated_normal_init(
             kk, (d_in, d_out), jnp.float32))(jax.random.split(k, e))
         return jax.vmap(lambda kk, w: peft_lib.init_linear(
-            kk, w, cfg.peft, name in targets, param_dtype, peft_dtype)
+            kk, w, cfg.peft, name in targets, param_dtype, peft_dtype,
+            module=name)
         )(jax.random.split(k, e), ws)
 
     p = {
@@ -85,13 +88,16 @@ def moe_init(key, cfg: ModelConfig, param_dtype, peft_dtype,
 def _expert_ffn(p: Dict, x: jax.Array, cfg: ModelConfig, compute_dtype):
     """x: (E, C, D) -> (E, C, D) through per-expert (PEFT-wrapped) FFN."""
     act = layers.mlp_activation(cfg.mlp_type)
-    up = apply_linear_stacked(p["up"], x, cfg.peft, compute_dtype)
+    up = apply_linear_stacked(p["up"], x, cfg.peft, compute_dtype,
+                              module="up")
     if "gate" in p:
-        gate = apply_linear_stacked(p["gate"], x, cfg.peft, compute_dtype)
+        gate = apply_linear_stacked(p["gate"], x, cfg.peft, compute_dtype,
+                                    module="gate")
         hidden = act(gate.astype(jnp.float32)).astype(compute_dtype) * up
     else:
         hidden = act(up.astype(jnp.float32)).astype(compute_dtype)
-    return apply_linear_stacked(p["down"], hidden, cfg.peft, compute_dtype)
+    return apply_linear_stacked(p["down"], hidden, cfg.peft, compute_dtype,
+                                module="down")
 
 
 def moe_apply(params: Dict, x: jax.Array, cfg: ModelConfig, compute_dtype,

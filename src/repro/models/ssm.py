@@ -163,9 +163,11 @@ def mamba_block_init(key, cfg: ModelConfig, param_dtype, peft_dtype,
                                          jnp.float32)
     return {
         "in_proj": peft_lib.init_linear(keys[2], w_in, cfg.peft, wrapped_in,
-                                        param_dtype, peft_dtype),
+                                        param_dtype, peft_dtype,
+                                        module="in_proj"),
         "out_proj": peft_lib.init_linear(keys[3], w_out, cfg.peft, wrapped_out,
-                                         param_dtype, peft_dtype),
+                                         param_dtype, peft_dtype,
+                                         module="out_proj"),
         "conv_w": layers.truncated_normal_init(
             keys[2], (cfg.ssm.conv_width, d["conv_ch"]), param_dtype, 2.0),
         "conv_b": jnp.zeros((d["conv_ch"],), param_dtype),
@@ -182,7 +184,7 @@ def mamba_block_apply(params: Dict, u: jax.Array, cfg: ModelConfig,
     """Training/prefill forward. u: (B,S,D) -> (B,S,D) [, decode cache]."""
     d = ssm_dims(cfg)
     zxbcdt = peft_lib.apply_linear(params["in_proj"], u, cfg.peft,
-                                   compute_dtype)
+                                   compute_dtype, module="in_proj")
     z, x, bmat, cmat, dt = _split_in_proj(zxbcdt, cfg)
     xbc_raw = jnp.concatenate([x, bmat, cmat], axis=-1)
     xbc = causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
@@ -199,7 +201,7 @@ def mamba_block_apply(params: Dict, u: jax.Array, cfg: ModelConfig,
     y = layers.apply_norm(params["norm"], y * jax.nn.silu(
         z.astype(jnp.float32)).astype(y.dtype))
     out = peft_lib.apply_linear(params["out_proj"], y, cfg.peft,
-                                 compute_dtype)
+                                 compute_dtype, module="out_proj")
     if not return_cache:
         return out
     kw = cfg.ssm.conv_width
@@ -214,7 +216,7 @@ def mamba_block_decode(params: Dict, u_t: jax.Array, cache: Dict,
     """Single-token decode. u_t: (B,1,D); cache: {conv_state, ssm_state}."""
     d = ssm_dims(cfg)
     zxbcdt = peft_lib.apply_linear(params["in_proj"], u_t[:, 0], cfg.peft,
-                                   compute_dtype)
+                                   compute_dtype, module="in_proj")
     z, x, bmat, cmat, dt = _split_in_proj(zxbcdt, cfg)
     xbc = jnp.concatenate([x, bmat, cmat], axis=-1)           # (B, conv_ch)
     xbc, conv_state = conv_step(xbc, cache["conv_state"], params["conv_w"],
@@ -229,7 +231,8 @@ def mamba_block_decode(params: Dict, u_t: jax.Array, cache: Dict,
     y = y.reshape(bsz, d["d_inner"])
     y = layers.apply_norm(params["norm"], y * jax.nn.silu(
         z.astype(jnp.float32)).astype(y.dtype))
-    out = peft_lib.apply_linear(params["out_proj"], y, cfg.peft, compute_dtype)
+    out = peft_lib.apply_linear(params["out_proj"], y, cfg.peft,
+                                compute_dtype, module="out_proj")
     return out[:, None, :], {"conv_state": conv_state, "ssm_state": ssm_state}
 
 

@@ -1,1 +1,1 @@
-from repro.serve.engine import ServeEngine, Request  # noqa: F401
+from repro.serve.engine import BASE_ADAPTER, Request, ServeEngine  # noqa: F401

@@ -1,9 +1,15 @@
 """Merged-weight serving engine: batched prefill + KV-cache decode with
-continuous-batching slots.
+continuous-batching slots and named adapters.
 
 The PEFT adapters are merged into the base weights first (zero added
 inference latency — the reparameterization-methods property the paper builds
-on), so the serving graph is identical to the base model's.
+on), so the serving graph is identical to the base model's.  Because the
+registry gives every method the same ``merge`` contract, the engine can hold
+*several* merged adapter variants of one base model ("named adapters"):
+requests carry an adapter name, admission groups each batch wave by adapter,
+and decode runs against that wave's merged weights.  All adapters share one
+compiled prefill/decode executable (identical shapes/dtypes), so switching
+adapters between waves costs a weight-pointer swap, not a recompile.
 """
 from __future__ import annotations
 
@@ -14,9 +20,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, PEFTConfig
 from repro.core import peft as peft_lib
 from repro.models import model as model_lib
+
+#: adapter name every request uses unless it asks for something else
+BASE_ADAPTER = "base"
 
 
 @dataclasses.dataclass
@@ -24,18 +33,27 @@ class Request:
     uid: int
     prompt: np.ndarray              # (S,) int32
     max_new_tokens: int = 16
+    adapter: str = BASE_ADAPTER     # which registered adapter serves this
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
 
 class ServeEngine:
-    """Fixed-slot continuous batcher over decode_step."""
+    """Fixed-slot continuous batcher over decode_step.
+
+    ``params`` is the (possibly PEFT-wrapped) tree the engine merges into the
+    ``"base"`` adapter.  More adapters — independently fine-tuned param trees
+    over the same architecture — join via :meth:`register_adapter`.
+    """
 
     def __init__(self, params, cfg: ModelConfig, max_len: int = 256,
                  slots: int = 4, greedy: bool = True):
+        # serving config: every linear is a plain {"w"} after merging
         self.cfg = dataclasses.replace(
-            cfg, peft=cfg.peft.replace(method="none"))
-        self.params = peft_lib.merge_tree(params, cfg.peft)
+            cfg, peft=PEFTConfig(method="none", target_modules=()))
+        self.base_peft = cfg.peft
+        self.adapters: Dict[str, object] = {
+            BASE_ADAPTER: peft_lib.merge_tree(params, cfg.peft)}
         self.max_len = max_len
         self.slots = slots
         self.greedy = greedy
@@ -47,6 +65,35 @@ class ServeEngine:
         self.cache = None
         self.positions = np.zeros((slots,), np.int32)
         self.active: List[Optional[Request]] = [None] * slots
+        self._wave_adapter = BASE_ADAPTER
+
+    # -- adapters ----------------------------------------------------------
+    @property
+    def params(self):
+        """Merged weights of the base adapter (historical attribute)."""
+        return self.adapters[BASE_ADAPTER]
+
+    def register_adapter(self, name: str, params,
+                         peft_cfg: Optional[PEFTConfig] = None) -> None:
+        """Merge one fine-tuned param tree and make it addressable by name.
+
+        ``peft_cfg`` defaults to the engine's construction-time PEFT config;
+        pass the adapter's own config when it was trained with a different
+        method / target map (the uniform merge API makes them equivalent at
+        serving time)."""
+        self.adapters[name] = peft_lib.merge_tree(
+            params, peft_cfg if peft_cfg is not None else self.base_peft)
+
+    def list_adapters(self) -> List[str]:
+        return sorted(self.adapters)
+
+    def _adapter_params(self, name: str):
+        try:
+            return self.adapters[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown adapter {name!r}; registered: "
+                f"{self.list_adapters()}") from None
 
     # -- admission ---------------------------------------------------------
     def _admit(self, queue: List[Request]):
@@ -54,18 +101,28 @@ class ServeEngine:
 
         Admission is batch-synchronous (a wave is admitted only when all
         slots are free) so every live slot shares the same decode position —
-        the single-scalar ``pos`` decode contract."""
+        the single-scalar ``pos`` decode contract.  A wave is also
+        adapter-homogeneous: the head-of-line request picks the adapter and
+        the wave takes the longest same-adapter prefix of the queue, so one
+        merged weight set serves the whole batched prefill + decode."""
         if any(r is not None for r in self.active):
             return
         empty = [i for i, r in enumerate(self.active) if r is None]
         if not empty or not queue:
             return
-        batch_reqs = [queue.pop(0) for _ in empty[:len(queue)]]
+        adapter = queue[0].adapter
+        wave_params = self._adapter_params(adapter)
+        take = 0
+        while (take < len(queue) and take < len(empty)
+               and queue[take].adapter == adapter):
+            take += 1
+        batch_reqs = [queue.pop(0) for _ in range(take)]
+        self._wave_adapter = adapter
         plen = max(len(r.prompt) for r in batch_reqs)
         toks = np.zeros((len(batch_reqs), plen), np.int32)
         for j, r in enumerate(batch_reqs):
             toks[j, plen - len(r.prompt):] = r.prompt  # left-pad
-        logits, cache = self._prefill(self.params,
+        logits, cache = self._prefill(wave_params,
                                       {"tokens": jnp.asarray(toks)})
         nxt = np.asarray(jnp.argmax(logits[:, -1, :self.cfg.vocab_size], -1))
         for j, r in enumerate(batch_reqs):
@@ -92,6 +149,8 @@ class ServeEngine:
     def run(self, requests: List[Request], max_steps: int = 512,
             ) -> List[Request]:
         queue = list(requests)
+        for r in queue:
+            self._adapter_params(r.adapter)  # fail fast on unknown adapters
         finished: List[Request] = []
         steps = 0
         while (queue or any(self.active)) and steps < max_steps:
@@ -105,7 +164,8 @@ class ServeEngine:
                 toks[i, 0] = self.active[i].generated[-1]
             pos = int(max(self.positions[i] for i in live))
             logits, self.cache = self._decode(
-                self.params, {"tokens": jnp.asarray(toks)}, self.cache,
+                self._adapter_params(self._wave_adapter),
+                {"tokens": jnp.asarray(toks)}, self.cache,
                 jnp.asarray(pos, jnp.int32))
             nxt = np.asarray(jnp.argmax(
                 logits[:, -1, :self.cfg.vocab_size], -1))

@@ -63,6 +63,8 @@ def default_rules(multi_pod: bool = False, pod_role: str = "dp") -> ShardingRule
         "fsdp": "data",         # weight reduction dim (ZeRO-3 style)
         "layers": None,         # scan-stacked layer axis
         "rank": None,           # PEFT subspace dims are tiny -> replicate
+        "oft_blocks": None,     # OFT/BOFT rotation-block axis (registry
+                                # logical_axes) -> replicate by default
         "state": None,          # SSM state dim
         "conv_ch": "model",     # SSM conv channels (d_inner + 2GN)
         "cache_seq": None,      # KV-cache sequence dim (decode override)

@@ -5,6 +5,11 @@ Key property (the paper's efficiency story, made distributed): gradients and
 optimizer state exist only for the PEFT parameters — for PSOFT that is
 r(r−1)/2+2r floats per wrapped linear, so the cross-data/pod gradient
 all-reduce moves KBs, not GBs.
+
+The trainable/frozen partition comes from ``model_lib.trainable_mask``, which
+resolves each linear's method through the PEFT registry — per-module method
+mixing (``PEFTConfig.target_modules`` as a ``{"q": "psoft", "up": "lora"}``
+map) therefore trains, shards, and checkpoints with no trainer changes.
 """
 from __future__ import annotations
 

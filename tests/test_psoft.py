@@ -1,7 +1,10 @@
 """PSOFT core: Theorem 4.1 geometry preservation, merge/apply equivalence,
 identity init, parameter counts (Table 8)."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev)")
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,0 +1,242 @@
+"""PEFT method registry: lifecycle coherence for all registered methods,
+per-method logical axes, optimizer-mask agreement, unknown-method errors,
+and per-module method mixing end-to-end (train -> merge -> serve)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import PEFTConfig
+from repro.core import peft, registry
+
+D_IN, D_OUT = 64, 48
+METHODS = ["psoft", "lora", "pissa", "dora", "lora_xs", "oft", "boft",
+           "goft", "qgoft"]
+
+
+def make_cfg(method):
+    return PEFTConfig(method=method, rank=8, oft_block_size=16,
+                      boft_blocks=8, boft_factors=2)
+
+
+def init_params(method, seed=0):
+    cfg = make_cfg(method)
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (D_IN, D_OUT)) * 0.2
+    p = registry.get_method(method).init(key, w, cfg, jnp.float32,
+                                         jnp.float32)
+    return cfg, w, p
+
+
+def perturb(p, method, cfg, scale=0.05):
+    out = dict(p)
+    for name in registry.get_method(method).trainable_names(cfg):
+        if name not in p:
+            continue
+        k = jax.random.PRNGKey(hash(name) % 2**31)
+        out[name] = p[name] + scale * jax.random.normal(k, p[name].shape)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# (a) apply == x @ merge, at init and off-init
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", METHODS + ["none"])
+@pytest.mark.parametrize("perturbed", [False, True])
+def test_apply_matches_merge(method, perturbed):
+    cfg, w, p = init_params(method)
+    m = registry.get_method(method)
+    if perturbed:
+        p = perturb(p, method, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (12, D_IN))
+    y1 = m.apply(p, x, cfg, jnp.float32)
+    y2 = x @ m.merge(p, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# logical axes cover every param at its true rank (the seed's "q" entry
+# returned (None,)*3 regardless of ndim)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", METHODS + ["none"])
+def test_logical_axes_match_param_ndim(method):
+    cfg, w, p = init_params(method)
+    axes = registry.get_method(method).logical_axes(cfg, "fsdp", "tensor")
+    for name, arr in p.items():
+        assert name in axes, f"{method}: no logical axes for {name!r}"
+        assert len(axes[name]) == arr.ndim, (
+            f"{method}.{name}: axes {axes[name]} vs ndim {arr.ndim}")
+
+
+def test_linear_logical_axes_shim_uses_true_rank():
+    cfg, w, p = init_params("boft")
+    ax = peft.linear_logical_axes(p, cfg, "fsdp", "tensor")
+    assert len(ax["q"]) == p["q"].ndim == 3
+    cfg2, _, p2 = init_params("psoft")
+    ax2 = peft.linear_logical_axes(p2, cfg2, "fsdp", "tensor")
+    assert len(ax2["q"]) == p2["q"].ndim == 1
+
+
+# ---------------------------------------------------------------------------
+# (b) trainable_names == exactly the optimizer-masked keys
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", METHODS)
+def test_trainable_names_match_optimizer_mask(method):
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+    from repro.optim import adamw
+    cfg = get_config("tiny", peft=make_cfg(method))
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    mask = model_lib.trainable_mask(cfg, params)
+    masked_keys = set()
+    flat_m = jax.tree_util.tree_flatten_with_path(mask)[0]
+    for kp, trainable in flat_m:
+        if trainable:
+            masked_keys.add(str(getattr(kp[-1], "key", kp[-1])))
+    expected = set(registry.get_method(method).trainable_names(cfg.peft))
+    assert masked_keys == expected, (method, masked_keys, expected)
+    # and the optimizer partition keeps exactly those leaves
+    tr, _ = adamw.partition(params, mask)
+    tr_keys = {str(getattr(kp[-1], "key", kp[-1]))
+               for kp, leaf in jax.tree_util.tree_flatten_with_path(tr)[0]
+               if leaf is not None}
+    assert tr_keys == expected
+
+
+# ---------------------------------------------------------------------------
+# (c) unknown methods fail loudly, at lookup and registration
+# ---------------------------------------------------------------------------
+
+def test_unknown_method_lookup_raises():
+    with pytest.raises(KeyError, match="unknown PEFT method 'does_not_exist'"):
+        registry.get_method("does_not_exist")
+    with pytest.raises(KeyError, match="registered methods"):
+        peft.init_linear(jax.random.PRNGKey(0),
+                         jnp.zeros((4, 4)), make_cfg("psoft"), True,
+                         jnp.float32, jnp.float32, method="does_not_exist")
+
+
+def test_duplicate_registration_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register(registry.get_method("lora"))
+
+
+def test_third_party_method_registers_and_dispatches():
+    class Shifted(registry.PEFTMethod):
+        name = "_test_shift"
+        marker_keys = ("shift",)
+
+        def init(self, key, w_pre, cfg, param_dtype, peft_dtype):
+            return {"w": w_pre.astype(param_dtype),
+                    "shift": jnp.zeros((w_pre.shape[1],), peft_dtype)}
+
+        def apply(self, params, x, cfg, compute_dtype):
+            return x @ params["w"] + params["shift"]
+
+        def merge(self, params, cfg):
+            return params["w"]  # (bias-only toy; merge ignores shift)
+
+        def trainable_names(self, cfg=None):
+            return ("shift",)
+
+        def logical_axes(self, cfg, in_axis, out_axis):
+            return {"w": (in_axis, out_axis), "shift": (out_axis,)}
+
+    try:
+        registry.register(Shifted())
+        cfg = make_cfg("psoft")
+        w = jnp.eye(4)
+        p = peft.init_linear(jax.random.PRNGKey(0), w, cfg, True,
+                             jnp.float32, jnp.float32, method="_test_shift")
+        x = jnp.ones((2, 4))
+        y = peft.apply_linear(p, x, cfg, jnp.float32, method="_test_shift")
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x))
+    finally:
+        registry._METHODS.pop("_test_shift", None)
+
+
+# ---------------------------------------------------------------------------
+# (d) mixed per-module target map: train, merge, serve
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mixed_setup():
+    from repro.configs import get_config
+    cfg = get_config("tiny")
+    cfg = cfg.replace(peft=cfg.peft.replace(
+        method="psoft",
+        target_modules={"q": "psoft", "up": "lora", "down": "lora"}))
+    return cfg
+
+
+def test_method_for_and_methods_in_use(mixed_setup):
+    cfg = mixed_setup.peft
+    assert cfg.method_for("q") == "psoft"
+    assert cfg.method_for("up") == "lora"
+    assert cfg.method_for("k") == "none" and not cfg.is_target("k")
+    assert cfg.method_for(None) == cfg.method
+    assert cfg.methods_in_use() == ("lora", "psoft")
+    tup = make_cfg("oft")
+    assert tup.method_for("q") == "oft" and tup.methods_in_use() == ("oft",)
+    assert tup.replace(target_modules=()).methods_in_use() == ()
+
+
+def test_mixed_config_param_structure(mixed_setup):
+    from repro.models import model as model_lib
+    cfg = mixed_setup
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    attn, mlp = params["layers"]["attn"], params["layers"]["mlp"]
+    assert "w_res" in attn["q"] and "a" not in attn["q"]      # psoft
+    assert "a" in mlp["up"] and "w_res" not in mlp["up"]      # lora
+    assert set(attn["k"]) == {"w"}                            # unwrapped
+    # sharding axes stay rank-correct across the mix
+    axes = model_lib.param_axes(cfg, model_lib.abstract_params(cfg))
+    flat_ax = jax.tree_util.tree_flatten_with_path(
+        axes, is_leaf=lambda x: isinstance(x, model_lib.LogicalAxes))[0]
+    flat_p = jax.tree.leaves(model_lib.abstract_params(cfg))
+    for (kp, ax), leaf in zip(flat_ax, flat_p):
+        assert len(ax) == leaf.ndim, (jax.tree_util.keystr(kp), ax, leaf)
+
+
+def test_mixed_config_trains_merges_serves(mixed_setup):
+    from repro.configs import TrainConfig
+    from repro.models import model as model_lib
+    from repro.optim import adamw
+    from repro.serve import Request, ServeEngine
+    from repro.train import trainer
+    cfg = mixed_setup
+    tc = TrainConfig(steps=3, learning_rate=1e-3)
+    state = trainer.init_train_state(jax.random.PRNGKey(0), cfg, tc)
+    # both methods' params sit in the trainable partition
+    tr_keys = {str(getattr(kp[-1], "key", kp[-1])) for kp, leaf in
+               jax.tree_util.tree_flatten_with_path(state.trainable)[0]
+               if leaf is not None}
+    assert tr_keys == {"q", "alpha", "beta", "a", "b"}
+    step = jax.jit(trainer.make_train_step(cfg, tc, "dense"))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    for _ in range(3):
+        state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    tuned = adamw.combine(state.trainable, state.frozen)
+    # merge == unmerged forward
+    logits = model_lib.forward_logits(tuned, {"tokens": toks}, cfg)
+    merged = peft.merge_tree(tuned, cfg.peft)
+    plain_cfg = cfg.replace(peft=PEFTConfig(method="none",
+                                            target_modules=()))
+    logits_m = model_lib.forward_logits(merged, {"tokens": toks}, plain_cfg)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_m),
+                               atol=2e-3, rtol=1e-2)
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(merged)[0]:
+        name = str(getattr(kp[-1], "key", kp[-1]))
+        assert name not in ("w_res", "A", "B", "q", "alpha", "beta", "a", "b")
+    # and it serves
+    eng = ServeEngine(tuned, cfg, max_len=32, slots=2)
+    done = eng.run([Request(uid=0, prompt=np.arange(5, dtype=np.int32),
+                            max_new_tokens=4)])
+    assert len(done) == 1 and len(done[0].generated) >= 4

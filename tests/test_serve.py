@@ -50,6 +50,40 @@ def test_engine_generates(setup):
         assert all(0 <= t < cfg.vocab_size for t in r.generated)
 
 
+def test_engine_named_adapters(setup):
+    """Two merged adapter variants served from one engine: waves are
+    adapter-homogeneous and unknown adapter names fail fast."""
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_len=48, slots=2)
+    # a second adapter: same base, PSOFT trainables nudged off identity
+    variant = jax.tree.map(lambda x: x, params)
+
+    def nudge(node):
+        if isinstance(node, dict):
+            return {k: (v + 0.05
+                        if k in ("q", "alpha", "beta") and hasattr(v, "ndim")
+                        else nudge(v))
+                    for k, v in node.items()}
+        return node
+    eng.register_adapter("tuned", nudge(variant), cfg.peft)
+    assert eng.list_adapters() == ["base", "tuned"]
+
+    prompt = np.arange(6, dtype=np.int32) % cfg.vocab_size
+    reqs = [Request(uid=0, prompt=prompt, max_new_tokens=5),
+            Request(uid=1, prompt=prompt, max_new_tokens=5, adapter="tuned"),
+            Request(uid=2, prompt=prompt, max_new_tokens=5, adapter="tuned")]
+    done = eng.run(reqs, max_steps=64)
+    assert len(done) == 3
+    by_uid = {r.uid: r for r in done}
+    # the two "tuned" requests ran the same weights -> same greedy output
+    assert by_uid[1].generated == by_uid[2].generated
+    # and those weights differ from base -> (generically) different output
+    assert by_uid[0].generated != by_uid[1].generated
+
+    with pytest.raises(KeyError, match="unknown adapter"):
+        eng.run([Request(uid=9, prompt=prompt, adapter="missing")])
+
+
 def test_engine_greedy_deterministic(setup):
     cfg, params = setup
     prompt = np.arange(5, dtype=np.int32) % cfg.vocab_size
