@@ -26,6 +26,20 @@ def method_cfgs(rank_psoft=46, rank_lora=8, rank_xs=136):
     }
 
 
+def nudge_psoft(tree, eps):
+    """A fine-tune stand-in: shift every PSOFT trainable (q/alpha/beta) off
+    identity by ``eps``.  Shared by the serve benchmark and the serve tests —
+    if the trainable key names ever change, update it here once."""
+    def rec(node):
+        if isinstance(node, dict):
+            return {k: (v + eps
+                        if k in ("q", "alpha", "beta") and hasattr(v, "ndim")
+                        else rec(v))
+                    for k, v in node.items()}
+        return node
+    return rec(jax.tree.map(lambda x: x, tree))
+
+
 def timeit(fn, *args, iters=5, warmup=2):
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
@@ -35,5 +49,11 @@ def timeit(fn, *args, iters=5, warmup=2):
     return (time.perf_counter() - t0) / iters
 
 
+#: every csv_row of the process, for the --json artifact (CI uploads it)
+RESULTS = []
+
+
 def csv_row(name, us_per_call, derived=""):
+    RESULTS.append({"name": name, "us_per_call": round(float(us_per_call), 1),
+                    "derived": str(derived)})
     print(f"{name},{us_per_call:.1f},{derived}")

@@ -9,11 +9,15 @@
     Tables 2/4/5 (quality proxy)  -> bench_convergence
     beyond-paper kernel fusion    -> bench_kernels
     registry dispatch hot path    -> bench_dispatch
+    heterogeneous-adapter serving -> bench_serve
 
-``--quick`` runs the CI smoke subset (seconds, CPU): the dispatch hot path —
-so PEFT-registry regressions are visible on every push — plus the closed-form
-Table 8 parameter anchors.
+``--quick`` runs the CI smoke subset (CPU): the dispatch hot path — so
+PEFT-registry regressions are visible on every push — the closed-form Table 8
+parameter anchors, and the mixed-vs-homogeneous serving throughput guardrail.
+``--json PATH`` additionally writes every result row as JSON (CI uploads the
+quick-bench JSON as a build artifact).
 """
+import json
 import os
 import sys
 import traceback
@@ -24,15 +28,19 @@ if _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
 
 
-def main(quick: bool = False) -> None:
+def main(quick: bool = False, json_path: str = "") -> None:
     from benchmarks import (bench_activation_memory, bench_convergence,
                             bench_dispatch, bench_geometry, bench_kernels,
-                            bench_neumann, bench_params, bench_speed)
+                            bench_neumann, bench_params, bench_serve,
+                            bench_speed)
+    from benchmarks import common
     if quick:
-        mods = [(bench_params, {}), (bench_dispatch, {"quick": True})]
+        mods = [(bench_params, {}), (bench_dispatch, {"quick": True}),
+                (bench_serve, {"quick": True})]
     else:
         mods = [(bench_params, {}), (bench_geometry, {}), (bench_neumann, {}),
                 (bench_kernels, {}), (bench_dispatch, {}),
+                (bench_serve, {}),
                 (bench_activation_memory, {}), (bench_speed, {}),
                 (bench_convergence, {})]
     failed = []
@@ -44,11 +52,26 @@ def main(quick: bool = False) -> None:
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             failed.append(name)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"quick": quick, "failed": failed,
+                       "results": common.RESULTS}, f, indent=2)
+        print(f"\nwrote {len(common.RESULTS)} rows to {json_path}")
     if failed:
         print(f"\nFAILED: {failed}")
         sys.exit(1)
     print("\nall benchmarks passed" + (" (quick subset)" if quick else ""))
 
 
+def _parse_json_path(argv):
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            raise SystemExit("--json requires a path argument")
+        return argv[i + 1]
+    return ""
+
+
 if __name__ == '__main__':
-    main(quick="--quick" in sys.argv[1:])
+    main(quick="--quick" in sys.argv[1:],
+         json_path=_parse_json_path(sys.argv[1:]))

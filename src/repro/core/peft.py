@@ -72,6 +72,12 @@ def init_linear(key: jax.Array, w_pre: jax.Array, cfg: PEFTConfig,
 def apply_linear(params: Dict[str, jax.Array], x: jax.Array, cfg: PEFTConfig,
                  compute_dtype=jnp.bfloat16, *, module: Optional[str] = None,
                  method: Optional[str] = None) -> jax.Array:
+    if registry.is_banked_linear(params):
+        # serve tree with a stacked adapter bank: gather this batch's
+        # per-slot deltas (ids come from the engine's trace-time context)
+        return registry.apply_batched(params, x, compute_dtype,
+                                      registry.current_adapter_ids(),
+                                      use_kernel=cfg.use_fused_kernel)
     m = registry.resolve(params, cfg, module=module, method=method)
     if cfg.use_fused_kernel and m.supports_fused_kernel and x.ndim == 2:
         return m.fused_apply(params, x, cfg, compute_dtype)

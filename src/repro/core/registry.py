@@ -20,12 +20,18 @@ Capability flags ride on the method object.  ``supports_fused_kernel`` marks
 methods with a fused Pallas forward (:mod:`repro.kernels.ops`); the model
 layer routes through :meth:`PEFTMethod.fused_apply` when the config enables
 it, so new kernels plug in without touching the dispatcher.
+``supports_batched_delta`` marks methods whose fine-tuned weight is an exact
+low-rank offset from the pre-trained weight; :func:`stack_deltas` stacks those
+offsets into a per-linear *adapter bank* and :func:`apply_batched` gathers one
+delta per batch row — the enabling contract for heterogeneous-adapter serving
+(see ``docs/serving.md``).
 
 Registering a third-party method is ~30 lines — see ``docs/adapter_api.md``.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+import contextlib
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +59,9 @@ class PEFTMethod:
     base_key: str = "w"
     #: set True when :meth:`fused_apply` routes to a fused accelerator kernel
     supports_fused_kernel: bool = False
+    #: set True when :meth:`delta_factors` returns exact low-rank factors of
+    #: the weight update (enables the low-rank path of the adapter bank)
+    supports_batched_delta: bool = False
 
     # -- lifecycle ---------------------------------------------------------
     def init(self, key: jax.Array, w_pre: jax.Array, cfg, param_dtype,
@@ -71,6 +80,27 @@ class PEFTMethod:
 
     def merge(self, params: Dict[str, jax.Array], cfg) -> jax.Array:
         raise NotImplementedError
+
+    # -- batched-delta serving capability ----------------------------------
+    def base_weight(self, params: Dict[str, jax.Array], cfg) -> jax.Array:
+        """The method's reconstruction of the *pre-trained* weight its
+        :meth:`delta_factors` are relative to.  :func:`stack_deltas` compares
+        this against the serving base to decide whether the low-rank path is
+        exact for a given adapter (else it falls back to a dense delta)."""
+        return params[self.base_key]
+
+    def delta_factors(self, params: Dict[str, jax.Array], cfg,
+                      ) -> Tuple[jax.Array, jax.Array]:
+        """Low-rank factors ``(left, right)`` with
+
+            merge(params) == base_weight(params) + left @ right
+
+        ``left``: (d_in, k), ``right``: (k, d_out), fp32.  Only valid when
+        :attr:`supports_batched_delta`; ranks may differ across methods —
+        :func:`stack_deltas` zero-pads to the bank's max rank."""
+        raise NotImplementedError(
+            f"method {self.name!r} has no low-rank delta "
+            f"(supports_batched_delta={self.supports_batched_delta})")
 
     # -- metadata ----------------------------------------------------------
     def trainable_names(self, cfg=None) -> Tuple[str, ...]:
@@ -178,12 +208,151 @@ def resolve(params: Dict, cfg, module: Optional[str] = None,
 
 
 # ---------------------------------------------------------------------------
+# adapter banks: stacked per-adapter deltas for heterogeneous-slot serving
+# ---------------------------------------------------------------------------
+#
+# A *bank* holds every registered adapter's weight update for ONE linear,
+# stacked along a leading adapter axis so a per-row gather (``adapter_ids``)
+# selects each batch slot's adapter inside a single forward pass:
+#
+#   low-rank: {"left": (..., N, d_in, k), "right": (..., N, k, d_out)}
+#   dense:    {"delta": (..., N, d_in, d_out)}
+#
+# (leading ``...`` dims are layer/expert stacking, mirroring the param tree.)
+# The low-rank form is exact only when every adapter's frozen base equals the
+# shared serving base; ``stack_deltas`` verifies that numerically per adapter
+# and silently falls back to a dense delta otherwise (always exact).
+
+_ADAPTER_IDS: Optional[jax.Array] = None
+
+
+@contextlib.contextmanager
+def batched_adapter_ids(ids: Optional[jax.Array]):
+    """Scope the per-row adapter-id vector for batched-delta application.
+
+    Trace-time context (like the sharding-rules context): the serving engine
+    wraps its jitted prefill/decode in this so every PEFT linear below can
+    gather its slot's delta without threading ids through each call site."""
+    global _ADAPTER_IDS
+    prev = _ADAPTER_IDS
+    _ADAPTER_IDS = ids
+    try:
+        yield
+    finally:
+        _ADAPTER_IDS = prev
+
+
+def current_adapter_ids() -> Optional[jax.Array]:
+    return _ADAPTER_IDS
+
+
+def _vmap_lead(fn, extra: int):
+    for _ in range(extra):
+        fn = jax.vmap(fn)
+    return fn
+
+
+def stack_deltas(base_w: jax.Array,
+                 adapters: Sequence[Tuple[Dict, object, Optional[str]]],
+                 *, atol: float = 1e-5, rtol: float = 1e-5) -> Optional[Dict]:
+    """Build one linear's adapter bank from per-adapter (params, cfg, module).
+
+    ``base_w``: the shared merged serving weight ``(..., d_in, d_out)``.
+    ``adapters``: one entry per adapter *in bank-index order*; each params
+    dict is the adapter's raw (unmerged) tree node for this linear, resolved
+    through its own PEFTConfig.  Returns a bank dict, or ``None`` when every
+    adapter's weight equals the base (no bank needed).  Eager-only: the
+    base-match check reads concrete values."""
+    import numpy as np
+
+    extra = base_w.ndim - 2
+    resolved = []
+    low_rank = True
+    for params, cfg, module in adapters:
+        m = resolve(params, cfg, module=module)
+        resolved.append((m, params, cfg))
+        if low_rank and m.supports_batched_delta:
+            recon = _vmap_lead(lambda p, m=m, cfg=cfg: m.base_weight(p, cfg),
+                               extra)(params)
+            low_rank = bool(np.allclose(
+                np.asarray(recon, np.float32), np.asarray(base_w, np.float32),
+                atol=atol, rtol=rtol))
+        else:
+            low_rank = False
+    if low_rank:
+        factors = [
+            _vmap_lead(lambda p, m=m, cfg=cfg: m.delta_factors(p, cfg),
+                       extra)(params)
+            for m, params, cfg in resolved]
+        kmax = max(l.shape[-1] for l, _ in factors)
+        if kmax == 0:
+            return None
+        lefts, rights = [], []
+        for l, r in factors:
+            pad = kmax - l.shape[-1]
+            if pad:
+                l = jnp.pad(l, [(0, 0)] * (l.ndim - 1) + [(0, pad)])
+                r = jnp.pad(r, [(0, 0)] * (r.ndim - 2) + [(0, pad), (0, 0)])
+            lefts.append(l)
+            rights.append(r)
+        right = jnp.stack(rights, axis=extra)
+        if not np.any(np.asarray(right)):
+            return None    # every adapter sits exactly at the base weights
+        return {"left": jnp.stack(lefts, axis=extra), "right": right}
+    deltas = [
+        _vmap_lead(lambda p, m=m, cfg=cfg: m.merge(p, cfg), extra)(params)
+        .astype(jnp.float32) - base_w.astype(jnp.float32)
+        for m, params, cfg in resolved]
+    delta = jnp.stack(deltas, axis=extra)
+    if not np.any(np.asarray(delta)):
+        return None
+    return {"delta": delta}
+
+
+def apply_batched(params: Dict, x: jax.Array, compute_dtype,
+                  adapter_ids: Optional[jax.Array],
+                  use_kernel: bool = False) -> jax.Array:
+    """Forward one banked linear: ``y[b] = x[b] @ (W + delta[ids[b]])``.
+
+    ``params``: {"w": base, "bank": {...}}; ``x``: (B, ..., d_in) with the
+    leading dim indexing batch slots; ``adapter_ids``: (B,) int32 (None →
+    base weights only, e.g. a non-serving caller touching a serve tree).
+    The low-rank path never materializes per-slot weight matrices — it runs
+    rank-k per-slot matmuls (the Pallas ``gather_delta_matmul`` kernel when
+    ``use_kernel`` and the shape allows, jnp einsums otherwise)."""
+    x = x.astype(compute_dtype)
+    bank = params.get("bank")
+    if bank is not None and adapter_ids is not None and "left" in bank \
+            and use_kernel and x.ndim == 3 and x.shape[1] == 1:
+        from repro.kernels import ops as kops
+        return kops.gather_delta_matmul(
+            x[:, 0], params["w"], bank["left"], bank["right"], adapter_ids,
+            compute_dtype=compute_dtype)[:, None, :]
+    y = x @ params["w"].astype(compute_dtype)
+    if bank is None or adapter_ids is None:
+        return y
+    if "delta" in bank:
+        d = jnp.take(bank["delta"], adapter_ids, axis=0)
+        return y + jnp.einsum("b...d,bdo->b...o", x,
+                              d.astype(compute_dtype))
+    left = jnp.take(bank["left"], adapter_ids, axis=0)
+    right = jnp.take(bank["right"], adapter_ids, axis=0)
+    u = jnp.einsum("b...d,bdk->b...k", x, left.astype(compute_dtype))
+    return y + jnp.einsum("b...k,bko->b...o", u, right.astype(compute_dtype))
+
+
+def is_banked_linear(node) -> bool:
+    return isinstance(node, dict) and "bank" in node and "w" in node
+
+
+# ---------------------------------------------------------------------------
 # the nine seed methods (+ "none")
 # ---------------------------------------------------------------------------
 
 
 class NoneMethod(PEFTMethod):
     name = "none"
+    supports_batched_delta = True   # rank-0 delta: the weight IS the base
 
     def init(self, key, w_pre, cfg, param_dtype, peft_dtype):
         return {"w": w_pre.astype(param_dtype)}
@@ -194,12 +363,18 @@ class NoneMethod(PEFTMethod):
     def merge(self, params, cfg):
         return params["w"]
 
+    def delta_factors(self, params, cfg):
+        d_in, d_out = params["w"].shape
+        return (jnp.zeros((d_in, 0), jnp.float32),
+                jnp.zeros((0, d_out), jnp.float32))
+
 
 class PSOFTMethod(PEFTMethod):
     name = "psoft"
     marker_keys = ("w_res",)
     base_key = "w_res"
     supports_fused_kernel = True
+    supports_batched_delta = True
 
     def init(self, key, w_pre, cfg, param_dtype, peft_dtype):
         return psoft.psoft_init(w_pre, cfg.rank, cfg.relax_vectors,
@@ -216,6 +391,23 @@ class PSOFTMethod(PEFTMethod):
 
     def merge(self, params, cfg):
         return psoft.psoft_merge(params, cfg.neumann_terms, cfg.exact_cayley)
+
+    def base_weight(self, params, cfg):
+        # W_pre = W_res + A·B (the SVD split is exact at init)
+        w = params["w_res"].astype(jnp.float32) + \
+            params["A"].astype(jnp.float32) @ params["B"].astype(jnp.float32)
+        return w.astype(params["w_res"].dtype)
+
+    def delta_factors(self, params, cfg):
+        # W_merged − W_pre = A·(diag(α) R diag(β) B − B): exact rank-r
+        rot = psoft.psoft_rotation(params, cfg.neumann_terms,
+                                   cfg.exact_cayley)
+        if "alpha" in params:
+            rot = params["alpha"].astype(jnp.float32)[:, None] * rot
+        if "beta" in params:
+            rot = rot * params["beta"].astype(jnp.float32)[None, :]
+        b = params["B"].astype(jnp.float32)
+        return params["A"].astype(jnp.float32), rot @ b - b
 
     def trainable_names(self, cfg=None):
         if cfg is not None and not cfg.relax_vectors:
@@ -234,9 +426,15 @@ class PSOFTMethod(PEFTMethod):
 class LoRAMethod(PEFTMethod):
     name = "lora"
     marker_keys = ("a", "b")
+    supports_batched_delta = True
 
     def _scale(self, cfg):
         return cfg.lora_alpha / cfg.rank
+
+    def delta_factors(self, params, cfg):
+        # merge − w == s·a@b; fold the scale into the narrow right factor
+        return (params["a"].astype(jnp.float32),
+                params["b"].astype(jnp.float32) * self._scale(cfg))
 
     def matches(self, params):
         return ("a" in params and "b" in params and "m" not in params
@@ -275,6 +473,9 @@ class PiSSAMethod(LoRAMethod):
 class DoRAMethod(LoRAMethod):
     name = "dora"
     marker_keys = ("a", "b", "m")
+    # the per-column magnitude renormalization makes the weight update
+    # full-rank — DoRA serves through the dense-delta fallback
+    supports_batched_delta = False
 
     def _scale(self, cfg):
         return cfg.lora_alpha / cfg.rank
@@ -306,9 +507,16 @@ class DoRAMethod(LoRAMethod):
 class LoRAXSMethod(PEFTMethod):
     name = "lora_xs"
     marker_keys = ("s",)
+    supports_batched_delta = True
 
     def matches(self, params):
         return "s" in params and "a" in params
+
+    def delta_factors(self, params, cfg):
+        # merge − w == a@s@b; fold the r×r core into the left factor
+        return (params["a"].astype(jnp.float32) @
+                params["s"].astype(jnp.float32),
+                params["b"].astype(jnp.float32))
 
     def init(self, key, w_pre, cfg, param_dtype, peft_dtype):
         return lora.lora_xs_init(w_pre, cfg.rank, param_dtype, peft_dtype)

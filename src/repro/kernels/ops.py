@@ -20,6 +20,7 @@ from repro.core import cayley
 from repro.kernels import ref
 from repro.kernels.blockdiag_rotate import blockdiag_rotate_pallas
 from repro.kernels.cayley_kernel import cayley_neumann_pallas
+from repro.kernels.gather_delta_matmul import gather_delta_matmul_pallas
 from repro.kernels.psoft_matmul import psoft_matmul_pallas
 
 
@@ -119,6 +120,24 @@ def psoft_matmul(x: jax.Array, params: Dict[str, jax.Array], *,
     beta = params.get("beta", jnp.ones((r,), jnp.float32))
     return _psoft_mm(x, params["w_res"], a, rot, params["B"], alpha, beta,
                      compute_dtype, interpret)
+
+
+def gather_delta_matmul(x: jax.Array, w: jax.Array, left: jax.Array,
+                        right: jax.Array, ids: jax.Array, *,
+                        compute_dtype=jnp.bfloat16,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """Heterogeneous-adapter decode matmul: per-row gathered low-rank delta.
+
+    y[b] = x[b] @ W + (x[b] @ left[ids[b]]) @ right[ids[b]] for 2-D x
+    (slots, d_in) — the serving hot path over a stacked adapter bank."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n = w.shape[1]
+    bn = 128
+    while n % bn:
+        bn //= 2
+    return gather_delta_matmul_pallas(
+        ids, x.astype(compute_dtype), w.astype(compute_dtype),
+        left.astype(compute_dtype), right, bn=bn, interpret=interpret)
 
 
 def blockdiag_rotate(x: jax.Array, q_flat_blocks: jax.Array, block: int,

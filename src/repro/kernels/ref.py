@@ -32,6 +32,21 @@ def cayley_neumann_ref(q: jax.Array, terms: int) -> jax.Array:
     return (eye - q) @ s
 
 
+def gather_delta_matmul_ref(ids, x, w, left, right, out_dtype=None):
+    """y[b] = x[b] @ W + (x[b] @ left[ids[b]]) @ right[ids[b]].
+
+    ids: (B,) int32; x: (B, K); w: (K, N); left: (A, K, r); right: (A, r, N).
+    fp32 accumulate — the heterogeneous-adapter decode oracle."""
+    out_dtype = out_dtype or x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 @ w.astype(jnp.float32)
+    u = jnp.einsum("bk,bkr->br", x32,
+                   jnp.take(left, ids, axis=0).astype(jnp.float32))
+    y = y + jnp.einsum("br,brn->bn", u,
+                       jnp.take(right, ids, axis=0).astype(jnp.float32))
+    return y.astype(out_dtype)
+
+
 def blockdiag_rotate_ref(x: jax.Array, rots: jax.Array) -> jax.Array:
     """x: (M, d); rots: (d/b, b, b) — per-block input rotation (OFTv2)."""
     m, d = x.shape

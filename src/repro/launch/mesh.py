@@ -9,10 +9,23 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5: explicit-sharding axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax: meshes are implicitly Auto-typed
+    AxisType = None
 
 from repro.configs.base import MeshConfig, ModelConfig
 from repro.sharding import ShardingRules, default_rules
+
+
+def _make_mesh(shape, axes) -> Mesh:
+    """jax.make_mesh, passing axis_types only where this jax supports it."""
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -20,13 +33,11 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     Multi-pod: (2, 16, 16) = 512 chips ("pod", "data", "model")."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh_from_config(mc: MeshConfig) -> Mesh:
-    return jax.make_mesh(mc.shape, mc.axes,
-                         axis_types=(AxisType.Auto,) * len(mc.axes))
+    return _make_mesh(mc.shape, mc.axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
@@ -34,8 +45,7 @@ def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
     n = jax.device_count()
     if data * model > n:
         data, model = n, 1
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def rules_for(cfg: ModelConfig, mesh: Mesh,

@@ -155,9 +155,17 @@ def attn_apply(params, x, cfg: ModelConfig, compute_dtype, causal=True,
 
 def attn_decode(params, x_t, cache: Dict, pos, cfg: ModelConfig,
                 compute_dtype, use_rope=True, cross_cache: Optional[Dict] = None):
-    """One-token decode. x_t: (B,1,D); cache k/v: (B,S,KH,hd)."""
+    """One-token decode. x_t: (B,1,D); cache k/v: (B,S,KH,hd).
+
+    ``pos`` is a scalar (all rows at one position — the historical contract)
+    or a (B,) vector of per-slot positions: each row RoPE-rotates, writes its
+    KV at, and attends over its own span (heterogeneous continuous batching).
+    """
     h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     b = x_t.shape[0]
+    positions = jnp.asarray(pos)
+    if positions.ndim == 0:
+        positions = jnp.full((b,), positions)
     if cross_cache is not None:
         q = peft_lib.apply_linear(params["q"], x_t, cfg.peft, compute_dtype,
                                   module="q")
@@ -179,14 +187,15 @@ def attn_decode(params, x_t, cache: Dict, pos, cfg: ModelConfig,
     k = k.reshape(b, 1, kh, hd)
     v = v.reshape(b, 1, kh, hd)
     if use_rope:
-        posv = jnp.full((b, 1), pos)
+        posv = positions[:, None]
         q = layers.apply_rope(q, posv, cfg.rope_theta)
         k = layers.apply_rope(k, posv, cfg.rope_theta)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
-    out = attention.decode_attention(q, k_cache, v_cache, pos + 1,
+    bidx = jnp.arange(b)
+    k_cache = cache["k"].at[bidx, positions].set(
+        k[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[bidx, positions].set(
+        v[:, 0].astype(cache["v"].dtype))
+    out = attention.decode_attention(q, k_cache, v_cache, positions + 1,
                                      expand_kv=_expand_kv_flag(cfg))
     out = out.reshape(b, 1, -1)
     y = peft_lib.apply_linear(params["o"], out, cfg.peft, compute_dtype,
@@ -608,15 +617,35 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
     raise ValueError(cfg.family)
 
 
+def _last_hidden(h, lengths):
+    """(B,1,D) hidden at each row's last *real* token.
+
+    ``lengths=None`` keeps the historical contract (position -1).  With a
+    (B,) lengths vector, right-padded prompts read position lengths-1 — pad
+    positions are never attended later (decode masks by per-slot span), so
+    right-padding to a shared bucket costs nothing in exactness."""
+    if lengths is None:
+        return h[:, -1:, :]
+    idx = (jnp.asarray(lengths) - 1).reshape(-1, 1, 1)
+    return jnp.take_along_axis(
+        h, jnp.broadcast_to(idx, (h.shape[0], 1, h.shape[2])), axis=1)
+
+
 def prefill(params, batch: Dict, cfg: ModelConfig, max_len: int,
-            moe_impl="capacity"):
-    """Run the prompt, build caches, return last-position logits + cache."""
+            moe_impl="capacity", lengths=None):
+    """Run the prompt, build caches, return last-position logits + cache.
+
+    ``lengths``: optional (B,) true prompt lengths for right-padded batches;
+    logits are then read at each row's last real token.  (For the recurrent
+    families the returned states still include pad tokens — pad only
+    attention-family prompts.)"""
     compute_dtype = _dt(cfg.dtype)
     bsz = batch["tokens"].shape[0]
     if cfg.family in ("ssm", "hybrid"):
         # run chunked scan once, then rebuild caches by replaying states:
         # simpler faithful approach — run the recurrent path with state carry
-        return _prefill_recurrent(params, batch, cfg, max_len, compute_dtype)
+        return _prefill_recurrent(params, batch, cfg, max_len, compute_dtype,
+                                  lengths)
     cache = init_cache(cfg, bsz, max_len)
     if cfg.family == "audio":
         enc_out = _run_encoder(params, batch["src_embeds"], cfg, compute_dtype)
@@ -646,17 +675,18 @@ def prefill(params, batch: Dict, cfg: ModelConfig, max_len: int,
                                    (params["layers"], cache["self"],
                                     cross_per_layer))
         h = layers.apply_norm(params["final_norm"], x)
-        logits = lm_logits(params, h[:, -1:, :], cfg)
+        logits = lm_logits(params, _last_hidden(h, lengths), cfg)
         return logits, {"self": new_self,
                         "cross": {**cross_per_layer,
                                   "len": cross["len"]}}
     h, _, new_caches = forward_hidden(params, batch, cfg, moe_impl,
                                       caches=cache)
-    logits = lm_logits(params, h[:, -1:, :], cfg)
+    logits = lm_logits(params, _last_hidden(h, lengths), cfg)
     return logits, new_caches
 
 
-def _prefill_recurrent(params, batch, cfg, max_len, compute_dtype):
+def _prefill_recurrent(params, batch, cfg, max_len, compute_dtype,
+                       lengths=None):
     """SSM/hybrid prefill: one chunked forward pass; decode caches come from
     the final SSD/conv states (and KV writes for hybrid attention layers)."""
     bsz = batch["tokens"].shape[0]
@@ -695,13 +725,18 @@ def _prefill_recurrent(params, batch, cfg, max_len, compute_dtype):
                                                 cache=attn_cache_proto[i])
             caches.append(cache_l)
     x = layers.apply_norm(params["final_norm"], x)
-    logits = lm_logits(params, x[:, -1:, :], cfg)
+    logits = lm_logits(params, _last_hidden(x, lengths), cfg)
     return logits, caches
 
 
 def decode_step(params, batch: Dict, cache: PyTree, pos, cfg: ModelConfig,
                 moe_impl="dense"):
-    """One-token serve step. batch['tokens']: (B,1). Returns (logits, cache)."""
+    """One-token serve step. batch['tokens']: (B,1). Returns (logits, cache).
+
+    ``pos`` is a scalar (legacy: every row at the same position) or a (B,)
+    per-slot position vector — the contract heterogeneous continuous batching
+    relies on (slots admitted at different times decode at different
+    positions; see repro.serve.engine)."""
     compute_dtype = _dt(cfg.dtype)
     x = layers.embed_lookup(params["embed"], batch["tokens"], compute_dtype)
     x = shard_act(x, ("batch", None, "embed"))

@@ -1,31 +1,44 @@
-"""Merged-weight serving engine: batched prefill + KV-cache decode with
-continuous-batching slots and named adapters.
+"""Serving engine: batched prefill + KV-cache decode with per-slot
+heterogeneous-adapter continuous batching.
 
-The PEFT adapters are merged into the base weights first (zero added
-inference latency — the reparameterization-methods property the paper builds
-on), so the serving graph is identical to the base model's.  Because the
-registry gives every method the same ``merge`` contract, the engine can hold
-*several* merged adapter variants of one base model ("named adapters"):
-requests carry an adapter name, admission groups each batch wave by adapter,
-and decode runs against that wave's merged weights.  All adapters share one
-compiled prefill/decode executable (identical shapes/dtypes), so switching
-adapters between waves costs a weight-pointer swap, not a recompile.
+The engine keeps ONE merged base tree (the reparameterization-methods
+property: PSOFT-family adapters fold into plain weights) plus a stacked
+*adapter bank* per fine-tuned linear — every registered adapter's weight
+update, stacked along a leading adapter axis (low-rank ``left``/``right``
+factors for methods with ``supports_batched_delta``, dense deltas otherwise;
+see :func:`repro.core.registry.stack_deltas`).  Prefill and decode run with a
+per-slot ``adapter_ids`` vector that gathers each slot's delta *inside* the
+forward pass, so one decode step serves slots on different adapters and one
+freed slot is refilled immediately — no adapter-homogeneous waves, no
+inter-wave draining.  Decode likewise takes per-slot positions: each slot
+RoPE-rotates, writes KV, and attends over its own span.
+
+All requests share one compiled prefill executable per prompt bucket and one
+decode executable; adding an adapter grows the bank (a recompile), serving it
+costs a gather.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import warnings
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, PEFTConfig
-from repro.core import peft as peft_lib
+from repro.core import peft as peft_lib, registry as peft_registry
 from repro.models import model as model_lib
 
 #: adapter name every request uses unless it asks for something else
 BASE_ADAPTER = "base"
+
+#: module names the bank path can serve: every logical linear the model
+#: routes through peft.apply_linear.  "router" is excluded — moe_apply reads
+#: its weight directly, so a banked router would silently serve the base
+#: (router diffs instead hit the loud non-linear-leaf check below).
+_LINEAR_MODULES = frozenset(model_lib._MODULE_NAMES) - {"router"}
 
 
 @dataclasses.dataclass
@@ -43,29 +56,53 @@ class ServeEngine:
 
     ``params`` is the (possibly PEFT-wrapped) tree the engine merges into the
     ``"base"`` adapter.  More adapters — independently fine-tuned param trees
-    over the same architecture — join via :meth:`register_adapter`.
+    over the same architecture — join via :meth:`register_adapter`; a decode
+    step serves any mix of them, one per slot.
     """
 
     def __init__(self, params, cfg: ModelConfig, max_len: int = 256,
-                 slots: int = 4, greedy: bool = True):
-        # serving config: every linear is a plain {"w"} after merging
+                 slots: int = 4, greedy: bool = True,
+                 use_fused_kernel: bool = False):
+        # serving config: every linear is a plain {"w"} (+bank) after merging
         self.cfg = dataclasses.replace(
-            cfg, peft=PEFTConfig(method="none", target_modules=()))
+            cfg, peft=PEFTConfig(method="none", target_modules=(),
+                                 use_fused_kernel=use_fused_kernel))
         self.base_peft = cfg.peft
+        # raw source trees (bank building needs the unmerged factors) and
+        # merged trees (base weights + legacy .adapters API), by name
+        self._sources: Dict[str, Tuple[object, PEFTConfig]] = {
+            BASE_ADAPTER: (params, cfg.peft)}
         self.adapters: Dict[str, object] = {
             BASE_ADAPTER: peft_lib.merge_tree(params, cfg.peft)}
+        self._order: List[str] = [BASE_ADAPTER]   # name -> bank index
+        self._serve_tree = None                   # rebuilt lazily on register
         self.max_len = max_len
         self.slots = slots
         self.greedy = greedy
-        self._decode = jax.jit(
-            lambda p, b, c, pos: model_lib.decode_step(p, b, c, pos,
-                                                       self.cfg))
-        self._prefill = jax.jit(
-            lambda p, b: model_lib.prefill(p, b, self.cfg, max_len))
+
+        def _decode(p, b, c, positions, ids):
+            with peft_registry.batched_adapter_ids(ids):
+                return model_lib.decode_step(p, b, c, positions, self.cfg)
+
+        def _prefill(p, b, lengths, ids):
+            # moe_impl="dense": capacity dispatch couples rows through shared
+            # expert buffers (pad/batchmate tokens could evict a request's
+            # tokens); the dense impl keeps every row's compute independent
+            # of its co-batch — the invariant bucket padding and mixed-
+            # adapter token-identity rest on
+            with peft_registry.batched_adapter_ids(ids):
+                return model_lib.prefill(p, b, self.cfg, max_len,
+                                         moe_impl="dense", lengths=lengths)
+
+        self._decode = jax.jit(_decode)
+        self._prefill = jax.jit(_prefill)
         self.cache = None
         self.positions = np.zeros((slots,), np.int32)
         self.active: List[Optional[Request]] = [None] * slots
-        self._wave_adapter = BASE_ADAPTER
+        #: (step, slot, uid, live uids in OTHER slots at admission time) —
+        #: observability hook: non-empty other-lives prove a freed slot was
+        #: refilled while the rest of the batch was mid-decode
+        self.admission_log: List[Tuple[int, int, int, List[int]]] = []
 
     # -- adapters ----------------------------------------------------------
     @property
@@ -75,14 +112,18 @@ class ServeEngine:
 
     def register_adapter(self, name: str, params,
                          peft_cfg: Optional[PEFTConfig] = None) -> None:
-        """Merge one fine-tuned param tree and make it addressable by name.
+        """Make one fine-tuned param tree addressable by name.
 
         ``peft_cfg`` defaults to the engine's construction-time PEFT config;
         pass the adapter's own config when it was trained with a different
-        method / target map (the uniform merge API makes them equivalent at
+        method / target map (the uniform delta API makes them equivalent at
         serving time)."""
-        self.adapters[name] = peft_lib.merge_tree(
-            params, peft_cfg if peft_cfg is not None else self.base_peft)
+        pc = peft_cfg if peft_cfg is not None else self.base_peft
+        self._sources[name] = (params, pc)
+        self.adapters[name] = peft_lib.merge_tree(params, pc)
+        if name not in self._order:
+            self._order.append(name)
+        self._serve_tree = None    # bank shape changed -> rebuild + recompile
 
     def list_adapters(self) -> List[str]:
         return sorted(self.adapters)
@@ -95,42 +136,126 @@ class ServeEngine:
                 f"unknown adapter {name!r}; registered: "
                 f"{self.list_adapters()}") from None
 
-    # -- admission ---------------------------------------------------------
-    def _admit(self, queue: List[Request]):
-        """Fill empty slots; prefill runs batched over the admitted group.
+    def _adapter_id(self, name: str) -> int:
+        self._adapter_params(name)  # fail fast on unknown names
+        return self._order.index(name)
 
-        Admission is batch-synchronous (a wave is admitted only when all
-        slots are free) so every live slot shares the same decode position —
-        the single-scalar ``pos`` decode contract.  A wave is also
-        adapter-homogeneous: the head-of-line request picks the adapter and
-        the wave takes the longest same-adapter prefix of the queue, so one
-        merged weight set serves the whole batched prefill + decode."""
-        if any(r is not None for r in self.active):
+    # -- adapter bank ------------------------------------------------------
+    def _banked_tree(self):
+        """Base merged tree with a stacked adapter bank on every linear any
+        adapter updates.  Built eagerly once per adapter-set change."""
+        if self._serve_tree is not None:
+            return self._serve_tree
+        base = self.adapters[BASE_ADAPTER]
+        entries = [self._sources[n] for n in self._order]
+        pcs = [pc for _, pc in entries]
+        kind_counts = {"left": 0, "delta": 0}
+
+        def rec(node, raws, path):
+            if isinstance(node, dict):
+                module = path[-1] if path else None
+                if set(node) == {"w"} and module in _LINEAR_MODULES and \
+                        getattr(node["w"], "ndim", 0) >= 2:
+                    bank = peft_registry.stack_deltas(
+                        node["w"],
+                        [(raw, pc, module)
+                         for raw, pc in zip(raws, pcs)])
+                    if bank is None:
+                        return node
+                    kind_counts["delta" if "delta" in bank else "left"] += 1
+                    if "moe" in path:
+                        # expert linears see capacity-dispatched (not
+                        # slot-major) activations, so a per-slot gather
+                        # would pick deltas by dispatch-buffer row
+                        raise ValueError(
+                            f"adapter updates MoE expert linear "
+                            f"{'/'.join(path)}; per-slot heterogeneous "
+                            f"serving does not support expert adapters yet "
+                            f"— serve them merged / single-adapter")
+                    return {"w": node["w"], "bank": bank}
+                return {k: rec(v, [r[k] for r in raws], path + (k,))
+                        for k, v in node.items()}
+            if isinstance(node, list):
+                return [rec(v, [r[i] for r in raws], path + (str(i),))
+                        for i, v in enumerate(node)]
+            # non-linear leaf: heterogeneous serving shares it — refuse
+            # silently-wrong outputs if an adapter changed it
+            for name in self._order[1:]:
+                other = self.adapters[name]
+                leaf = other
+                for k in path:
+                    leaf = leaf[int(k) if isinstance(leaf, list) else k]
+                if not np.array_equal(np.asarray(leaf), np.asarray(node)):
+                    raise ValueError(
+                        f"adapter {name!r} differs from base at non-linear "
+                        f"param {'/'.join(path)}; per-slot serving only "
+                        f"covers linear-module updates")
+            return node
+
+        raws = [raw for raw, _ in entries]
+        self._serve_tree = rec(base, raws, ())
+        if kind_counts["delta"]:
+            # always exact, but N·d_in·d_out fp32 per linear — make the
+            # memory cliff visible instead of silently eating it
+            warnings.warn(
+                f"{kind_counts['delta']} of "
+                f"{kind_counts['delta'] + kind_counts['left']} adapter banks "
+                f"use the DENSE delta fallback. The low-rank path needs "
+                f"every adapter's frozen base to equal the serving base "
+                f"exactly: serving from a fine-tuned base tree, or "
+                f"PiSSA/DoRA/OFT-family/full-FT adapters, all fall back "
+                f"(see docs/serving.md).")
+        return self._serve_tree
+
+    # -- admission ---------------------------------------------------------
+    def _bucket(self, plen: int) -> int:
+        """Prefill padding bucket.  Attention families right-pad to an
+        8-multiple (pads are never attended: logits read the true last token
+        and decode masks per-slot spans), so a handful of executables cover
+        all prompt lengths.  Recurrent families (SSM/hybrid) prefill at the
+        exact length — their scan states would absorb pad tokens."""
+        if self.cfg.family in ("ssm", "hybrid"):
+            return plen
+        return min(self.max_len, ((plen + 7) // 8) * 8)
+
+    def _admit(self, queue: List[Request], step: int):
+        """Fill every free slot immediately.
+
+        Admission is per-slot and adapter-heterogeneous: freed slots take the
+        queue head regardless of which adapters the other slots are
+        mid-decode on.  Same-step admissions sharing a padding bucket prefill
+        as one batch (per-row ``lengths``/``adapter_ids``)."""
+        free = [i for i in range(self.slots) if self.active[i] is None]
+        if not free or not queue:
             return
-        empty = [i for i, r in enumerate(self.active) if r is None]
-        if not empty or not queue:
-            return
-        adapter = queue[0].adapter
-        wave_params = self._adapter_params(adapter)
-        take = 0
-        while (take < len(queue) and take < len(empty)
-               and queue[take].adapter == adapter):
-            take += 1
-        batch_reqs = [queue.pop(0) for _ in range(take)]
-        self._wave_adapter = adapter
-        plen = max(len(r.prompt) for r in batch_reqs)
-        toks = np.zeros((len(batch_reqs), plen), np.int32)
-        for j, r in enumerate(batch_reqs):
-            toks[j, plen - len(r.prompt):] = r.prompt  # left-pad
-        logits, cache = self._prefill(wave_params,
-                                      {"tokens": jnp.asarray(toks)})
-        nxt = np.asarray(jnp.argmax(logits[:, -1, :self.cfg.vocab_size], -1))
-        for j, r in enumerate(batch_reqs):
-            slot = empty[j]
-            self.active[slot] = r
-            r.generated.append(int(nxt[j]))
-            self.positions[slot] = plen
-            self._install_cache(slot, cache, j)
+        tree = self._banked_tree()
+        admitted = [(slot, queue.pop(0))
+                    for slot in free[:len(queue)]]
+        groups: Dict[int, List[Tuple[int, Request]]] = {}
+        for slot, r in admitted:
+            groups.setdefault(self._bucket(len(r.prompt)), []).append(
+                (slot, r))
+        for bucket, group in groups.items():
+            toks = np.zeros((len(group), bucket), np.int32)
+            lens = np.zeros((len(group),), np.int32)
+            ids = np.zeros((len(group),), np.int32)
+            for j, (slot, r) in enumerate(group):
+                toks[j, :len(r.prompt)] = r.prompt
+                lens[j] = len(r.prompt)
+                ids[j] = self._adapter_id(r.adapter)
+            logits, cache = self._prefill(
+                tree, {"tokens": jnp.asarray(toks)}, jnp.asarray(lens),
+                jnp.asarray(ids))
+            nxt = np.asarray(jnp.argmax(
+                logits[:, -1, :self.cfg.vocab_size], -1))
+            for j, (slot, r) in enumerate(group):
+                others = [q.uid for i, q in enumerate(self.active)
+                          if q is not None and i != slot]
+                self.active[slot] = r
+                r.generated.append(int(nxt[j]))
+                self.positions[slot] = len(r.prompt)
+                self._install_cache(slot, cache, j)
+                self.admission_log.append((step, slot, r.uid, others))
 
     def _install_cache(self, slot: int, cache, j: int):
         sliced = jax.tree.map(lambda x: x[:, j:j + 1] if x.ndim > 1 else x,
@@ -151,22 +276,29 @@ class ServeEngine:
         queue = list(requests)
         for r in queue:
             self._adapter_params(r.adapter)  # fail fast on unknown adapters
+            if not 0 < len(r.prompt) < self.max_len:
+                raise ValueError(
+                    f"request {r.uid}: prompt length {len(r.prompt)} must be "
+                    f"in [1, max_len) = [1, {self.max_len}) — the slot needs "
+                    f"at least one free cache position to decode into")
+        tree = self._banked_tree()
         finished: List[Request] = []
         steps = 0
-        while (queue or any(self.active)) and steps < max_steps:
+        while (queue or any(r is not None for r in self.active)) \
+                and steps < max_steps:
             steps += 1
-            self._admit(queue)
+            self._admit(queue, steps)
             live = [i for i, r in enumerate(self.active) if r is not None]
             if not live:
                 continue
             toks = np.zeros((self.slots, 1), np.int32)
+            ids = np.zeros((self.slots,), np.int32)
             for i in live:
                 toks[i, 0] = self.active[i].generated[-1]
-            pos = int(max(self.positions[i] for i in live))
+                ids[i] = self._adapter_id(self.active[i].adapter)
             logits, self.cache = self._decode(
-                self._adapter_params(self._wave_adapter),
-                {"tokens": jnp.asarray(toks)}, self.cache,
-                jnp.asarray(pos, jnp.int32))
+                tree, {"tokens": jnp.asarray(toks)}, self.cache,
+                jnp.asarray(self.positions), jnp.asarray(ids))
             nxt = np.asarray(jnp.argmax(
                 logits[:, -1, :self.cfg.vocab_size], -1))
             for i in live:
@@ -178,4 +310,8 @@ class ServeEngine:
                     r.done = True
                     finished.append(r)
                     self.active[i] = None
+        #: engine iterations the last run() took — the deterministic
+        #: wave-serialization metric (a wave engine pays ~one full
+        #: prefill+decode pass per adapter switch; per-slot batching doesn't)
+        self.last_run_steps = steps
         return finished

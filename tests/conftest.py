@@ -2,7 +2,9 @@ import os
 import sys
 
 # tests must see ONE device (the dry-run sets its own 512-device flag in a
-# fresh process); make sure src/ is importable regardless of cwd
+# fresh process); make sure src/ (and the repo root, for shared benchmark
+# helpers) is importable regardless of cwd
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402

@@ -240,3 +240,128 @@ def test_mixed_config_trains_merges_serves(mixed_setup):
     done = eng.run([Request(uid=0, prompt=np.arange(5, dtype=np.int32),
                             max_new_tokens=4)])
     assert len(done) == 1 and len(done[0].generated) >= 4
+
+
+# ---------------------------------------------------------------------------
+# (f) adapter banks: stack_deltas + apply_batched (heterogeneous serving)
+# ---------------------------------------------------------------------------
+
+LOW_RANK_METHODS = ["psoft", "lora", "lora_xs"]
+# pissa trains the principal factors themselves, so its delta is relative to
+# the SVD residual, not the serving base -> the base-match check routes it
+# (and the non-reparameterized rotations / dora) through the dense fallback
+DENSE_METHODS = ["pissa", "dora", "oft", "boft", "goft", "qgoft"]
+
+
+def _bank_entries(method, n_adapters=2):
+    """Base (identity adapter) + n perturbed fine-tunes of one weight."""
+    cfg, w, p0 = init_params(method)
+    base_w = registry.get_method(method).merge(p0, cfg)
+    entries = [(p0, cfg, None)]
+    for i in range(n_adapters):
+        entries.append((perturb(p0, method, cfg, scale=0.05 * (i + 1)),
+                        cfg, None))
+    return cfg, base_w, entries
+
+
+@pytest.mark.parametrize("method", LOW_RANK_METHODS)
+def test_stack_deltas_low_rank_exact(method):
+    cfg, base_w, entries = _bank_entries(method)
+    bank = registry.stack_deltas(base_w, entries)
+    assert bank is not None and set(bank) == {"left", "right"}
+    for i, (p, c, _) in enumerate(entries):
+        merged = registry.resolve(p, c).merge(p, c).astype(jnp.float32)
+        via_bank = base_w.astype(jnp.float32) + \
+            bank["left"][i] @ bank["right"][i]
+        np.testing.assert_allclose(np.asarray(via_bank), np.asarray(merged),
+                                   atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("method", DENSE_METHODS)
+def test_stack_deltas_dense_fallback_exact(method):
+    cfg, base_w, entries = _bank_entries(method)
+    bank = registry.stack_deltas(base_w, entries)
+    assert bank is not None and set(bank) == {"delta"}
+    for i, (p, c, _) in enumerate(entries):
+        merged = registry.resolve(p, c).merge(p, c).astype(jnp.float32)
+        via_bank = base_w.astype(jnp.float32) + bank["delta"][i]
+        np.testing.assert_allclose(np.asarray(via_bank), np.asarray(merged),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_stack_deltas_identity_adapters_elide_bank():
+    """All adapters exactly at the base weight -> no bank needed."""
+    cfg, w, p0 = init_params("lora")
+    base_w = registry.get_method("lora").merge(p0, cfg)
+    bank = registry.stack_deltas(base_w, [(p0, cfg, None), (p0, cfg, None)])
+    assert bank is None
+
+
+def test_stack_deltas_mixed_methods_pad_rank():
+    """lora(r=8) + psoft(r=8) + plain base stack into one padded bank."""
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (D_IN, D_OUT)) * 0.2
+    lcfg, pcfg = make_cfg("lora"), make_cfg("psoft")
+    pl = perturb(registry.get_method("lora").init(key, w, lcfg, jnp.float32,
+                                                  jnp.float32), "lora", lcfg)
+    pp = perturb(registry.get_method("psoft").init(key, w, pcfg, jnp.float32,
+                                                    jnp.float32), "psoft",
+                 pcfg)
+    entries = [({"w": w}, make_cfg("none"), None), (pl, lcfg, None),
+               (pp, pcfg, None)]
+    bank = registry.stack_deltas(w, entries)
+    assert bank is not None and set(bank) == {"left", "right"}
+    assert bank["left"].shape[0] == 3
+    merges = [w, registry.get_method("lora").merge(pl, lcfg),
+              registry.get_method("psoft").merge(pp, pcfg)]
+    for i, merged in enumerate(merges):
+        via_bank = w.astype(jnp.float32) + bank["left"][i] @ bank["right"][i]
+        np.testing.assert_allclose(np.asarray(via_bank),
+                                   np.asarray(merged, dtype=np.float32),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_stack_deltas_foreign_base_falls_dense():
+    """An adapter whose frozen base differs from the serving base must not
+    take the low-rank path (its factors are relative to a different W)."""
+    cfg, w, p0 = init_params("lora")
+    base_w = registry.get_method("lora").merge(p0, cfg)
+    foreign = dict(perturb(p0, "lora", cfg))
+    foreign["w"] = p0["w"] + 0.1   # trained from a different checkpoint
+    bank = registry.stack_deltas(base_w, [(p0, cfg, None),
+                                          (foreign, cfg, None)])
+    assert bank is not None and set(bank) == {"delta"}
+    merged = registry.get_method("lora").merge(foreign, cfg)
+    np.testing.assert_allclose(
+        np.asarray(base_w.astype(jnp.float32) + bank["delta"][1]),
+        np.asarray(merged, dtype=np.float32), atol=1e-4, rtol=1e-4)
+
+
+def test_apply_batched_gathers_per_row():
+    cfg, base_w, entries = _bank_entries("lora", n_adapters=2)
+    bank = registry.stack_deltas(base_w, entries)
+    params = {"w": base_w, "bank": bank}
+    x = jax.random.normal(jax.random.PRNGKey(5), (3, 4, D_IN))
+    ids = jnp.asarray([2, 0, 1], jnp.int32)
+    got = registry.apply_batched(params, x, jnp.float32, ids)
+    for row, aid in enumerate([2, 0, 1]):
+        p, c, _ = entries[aid]
+        want = x[row] @ registry.resolve(p, c).merge(p, c).astype(jnp.float32)
+        np.testing.assert_allclose(np.asarray(got[row]), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
+    # ids=None (non-serving caller): base weights only
+    base_only = registry.apply_batched(params, x, jnp.float32, None)
+    np.testing.assert_allclose(np.asarray(base_only),
+                               np.asarray(x @ base_w.astype(jnp.float32)),
+                               atol=1e-5)
+
+
+def test_batched_adapter_ids_context_scopes():
+    assert registry.current_adapter_ids() is None
+    ids = jnp.asarray([0, 1], jnp.int32)
+    with registry.batched_adapter_ids(ids):
+        assert registry.current_adapter_ids() is ids
+        with registry.batched_adapter_ids(None):
+            assert registry.current_adapter_ids() is None
+        assert registry.current_adapter_ids() is ids
+    assert registry.current_adapter_ids() is None

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from benchmarks.common import nudge_psoft
 from repro.configs import get_config
 from repro.models import model as model_lib
 from repro.serve import Request, ServeEngine
@@ -82,6 +83,100 @@ def test_engine_named_adapters(setup):
 
     with pytest.raises(KeyError, match="unknown adapter"):
         eng.run([Request(uid=9, prompt=prompt, adapter="missing")])
+
+
+def _engine_with_adapters(params, cfg, slots):
+    eng = ServeEngine(params, cfg, max_len=48, slots=slots)
+    eng.register_adapter("tuned_a", nudge_psoft(params, 0.05), cfg.peft)
+    eng.register_adapter("tuned_b", nudge_psoft(params, -0.07), cfg.peft)
+    return eng
+
+
+def test_unequal_prompt_lengths_regression(setup):
+    """Slots admitted with very different prompt lengths decode at per-slot
+    positions.  The old engine took ``pos = max(positions[live])``, silently
+    corrupting the shorter slot's RoPE angles and attention span whenever
+    live positions disagreed — this run would have caught it."""
+    cfg, params = setup
+    short = (np.arange(3, dtype=np.int32) * 7 + 1) % cfg.vocab_size
+    long = (np.arange(11, dtype=np.int32) * 5 + 3) % cfg.vocab_size
+    eng = ServeEngine(params, cfg, max_len=48, slots=2)
+    done = eng.run([Request(uid=0, prompt=short, max_new_tokens=6),
+                    Request(uid=1, prompt=long, max_new_tokens=6)],
+                   max_steps=64)
+    assert len(done) == 2
+    by_uid = {r.uid: r.generated for r in done}
+    # isolated single-slot runs are the ground truth
+    for uid, prompt in ((0, short), (1, long)):
+        solo = ServeEngine(params, cfg, max_len=48, slots=1)
+        ref = solo.run([Request(uid=uid, prompt=prompt, max_new_tokens=6)],
+                       max_steps=64)
+        assert by_uid[uid] == ref[0].generated, (
+            f"concurrent decode diverged from isolated run for uid {uid}")
+
+
+def test_mixed_adapter_equivalence_no_draining(setup):
+    """A queue interleaving 3 adapters produces token-identical outputs to
+    three homogeneous runs, and a freed slot is refilled while other slots
+    are mid-decode (no inter-wave draining)."""
+    cfg, params = setup
+    rng = np.random.default_rng(7)
+    adapters = ["base", "tuned_a", "tuned_b"]
+    # interleaved A,B,C,A,B,C with staggered lengths so slots free early
+    reqs_spec = [(uid, adapters[uid % 3],
+                  rng.integers(0, cfg.vocab_size, size=3 + uid % 4,
+                               dtype=np.int32),
+                  3 + (uid % 3) * 4)
+                 for uid in range(6)]
+
+    def build(spec):
+        return [Request(uid=u, prompt=p.copy(), max_new_tokens=m, adapter=a)
+                for u, a, p, m in spec]
+
+    mixed = _engine_with_adapters(params, cfg, slots=2)
+    done = mixed.run(build(reqs_spec), max_steps=128)
+    assert len(done) == 6
+    by_uid = {r.uid: r.generated for r in done}
+
+    # no adapter-homogeneous wave serialization: some slot was admitted while
+    # another slot (a different adapter) was mid-decode
+    refills = [ev for ev in mixed.admission_log if ev[3]]
+    assert refills, f"no mid-decode refill observed: {mixed.admission_log}"
+    late = [ev for ev in mixed.admission_log if ev[0] > 1 and ev[3]]
+    assert late, ("every admission drained the batch first: "
+                  f"{mixed.admission_log}")
+
+    # token-identical to homogeneous runs (same engine config, same bank)
+    for adapter in adapters:
+        homo = _engine_with_adapters(params, cfg, slots=2)
+        spec = [s for s in reqs_spec if s[1] == adapter]
+        ref = homo.run(build(spec), max_steps=128)
+        for r in ref:
+            assert by_uid[r.uid] == r.generated, (
+                f"mixed run diverged from homogeneous {adapter} run "
+                f"for uid {r.uid}")
+
+
+def test_engine_rejects_unservable_adapters(setup):
+    """Adapters the bank cannot represent fail loudly, not silently-wrong:
+    non-linear diffs (norms) and MoE expert deltas."""
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_len=32, slots=1)
+    variant = jax.tree.map(lambda x: x, params)
+    variant["final_norm"] = jax.tree.map(lambda x: x + 0.1,
+                                         variant["final_norm"])
+    eng.register_adapter("bad_norm", variant, cfg.peft)
+    with pytest.raises(ValueError, match="non-linear"):
+        eng.run([Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                         max_new_tokens=2, adapter="bad_norm")])
+
+    mcfg = get_config("deepseek-moe-16b").reduced()
+    mparams = model_lib.init_params(jax.random.PRNGKey(0), mcfg)
+    meng = ServeEngine(mparams, mcfg, max_len=32, slots=1)
+    meng.register_adapter("tuned", nudge_psoft(mparams, 0.05), mcfg.peft)
+    with pytest.raises(ValueError, match="MoE expert"):
+        meng.run([Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                          max_new_tokens=2, adapter="tuned")])
 
 
 def test_engine_greedy_deterministic(setup):
