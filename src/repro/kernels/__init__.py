@@ -1,4 +1,6 @@
 # Pallas TPU kernels for the PSOFT hot-spots (fused subspace matmul,
-# on-chip Cayley-Neumann series, block-diagonal OFT rotation baseline).
+# on-chip Cayley-Neumann series, block-diagonal OFT rotation baseline,
+# scalar-prefetch serving kernels: gathered adapter-delta matmul and
+# block-paged decode attention).
 # Validated against ref.py oracles with interpret=True on CPU.
 from repro.kernels import ops, ref  # noqa: F401

@@ -21,6 +21,7 @@ from repro.kernels import ref
 from repro.kernels.blockdiag_rotate import blockdiag_rotate_pallas
 from repro.kernels.cayley_kernel import cayley_neumann_pallas
 from repro.kernels.gather_delta_matmul import gather_delta_matmul_pallas
+from repro.kernels.paged_decode_attention import paged_decode_attention_pallas
 from repro.kernels.psoft_matmul import psoft_matmul_pallas
 
 
@@ -138,6 +139,21 @@ def gather_delta_matmul(x: jax.Array, w: jax.Array, left: jax.Array,
     return gather_delta_matmul_pallas(
         ids, x.astype(compute_dtype), w.astype(compute_dtype),
         left.astype(compute_dtype), right, bn=bn, interpret=interpret)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, page_table: jax.Array,
+                           lengths: jax.Array, *,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """One-token attention over block-paged KV pools (the serving hot path).
+
+    q: (B, H, D); pools: (P, pg, KH, D); page_table: (B, maxp); lengths:
+    (B,).  Pages stream by scalar-prefetched page id — no contiguous per-row
+    gather is ever materialized."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return paged_decode_attention_pallas(
+        q, k_pool, v_pool, page_table.astype(jnp.int32),
+        lengths.astype(jnp.int32), interpret=interpret)
 
 
 def blockdiag_rotate(x: jax.Array, q_flat_blocks: jax.Array, block: int,

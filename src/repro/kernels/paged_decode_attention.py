@@ -1,0 +1,101 @@
+"""Block-paged decode attention Pallas kernel (TPU target).
+
+One-token GQA attention over a block-paged KV cache: the KV pool is a global
+``(num_pages, page_size, kv_heads, head_dim)`` buffer and every batch row
+(= continuous-batching slot) owns an ordered page list in ``page_table``.
+The page ids arrive via scalar prefetch (``pltpu.PrefetchScalarGridSpec``),
+so each program's BlockSpec index map can DMA exactly its row's next KV page
+from HBM — the same scalar-prefetch-drives-DMA pattern as
+``gather_delta_matmul`` (adapter ids there, page ids here).  Nothing is ever
+gathered into a contiguous per-row cache: the pages stream through VMEM one
+at a time and fold into an online-softmax accumulator.
+
+Grid: (B, pages_per_row) with the page dimension innermost (sequential on
+TPU), flash-decoding style: fp32 running (max, sum, acc) scratch per row,
+masked by the row's valid length, output written on the last page step.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, page_size: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kh, g, hd = acc_ref.shape
+    q = q_ref[0].astype(jnp.float32).reshape(kh, g, hd)
+    k = k_ref[0].astype(jnp.float32)                     # (pg, kh, hd)
+    v = v_ref[0].astype(jnp.float32)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("kgd,pkd->kgp", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    valid = pos < len_ref[b]
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    # explicit zeroing: a fully-masked page has s == m_new == NEG_INF and
+    # exp(s - m_new) would be 1, silently attending to garbage pages
+    p = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+        "kgp,pkd->kgd", p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...][..., None], 1e-30)
+        o_ref[...] = out.reshape(1, kh * g, hd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_pallas(q, k_pool, v_pool, page_table, lengths,
+                                  interpret: bool = False):
+    """q: (B,H,D); pools: (P,pg,KH,D); page_table: (B,maxp); lengths: (B,)."""
+    b, h, hd = q.shape
+    _, pg, kh, _ = k_pool.shape
+    maxp = page_table.shape[1]
+    assert h % kh == 0, f"H={h} not divisible by KH={kh}"
+    g = h // kh
+    pt_flat = page_table.reshape(-1).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, maxp),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda i, j, pt, ln: (i, 0, 0)),     # q
+            pl.BlockSpec((1, pg, kh, hd),
+                         lambda i, j, pt, ln: (pt[i * maxp + j], 0, 0, 0)),
+            pl.BlockSpec((1, pg, kh, hd),
+                         lambda i, j, pt, ln: (pt[i * maxp + j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda i, j, pt, ln: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kh, g, hd), jnp.float32),   # output accumulator
+            pltpu.VMEM((kh, g), jnp.float32),       # running max
+            pltpu.VMEM((kh, g), jnp.float32),       # running sum
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, page_size=pg),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        interpret=interpret,
+    )(pt_flat, lengths.astype(jnp.int32), q, k_pool, v_pool)

@@ -47,6 +47,33 @@ def gather_delta_matmul_ref(ids, x, w, left, right, out_dtype=None):
     return y.astype(out_dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, page_table, lengths,
+                               out_dtype=None):
+    """One-token GQA attention over a block-paged KV cache.
+
+    q: (B, H, D); pools: (P, pg, KH, D); page_table: (B, maxp) int32 page ids
+    per row, in position order; lengths: (B,) valid tokens per row.  Gathers
+    each row's pages into a contiguous (maxp*pg) view and runs masked-softmax
+    attention — fp32 accumulate, the paged-serving decode oracle."""
+    out_dtype = out_dtype or q.dtype
+    b, h, d = q.shape
+    pg, kh = k_pool.shape[1], k_pool.shape[2]
+    maxp = page_table.shape[1]
+    flat = page_table.reshape(-1)
+    kg = jnp.take(k_pool, flat, axis=0).reshape(b, maxp * pg, kh, d)
+    vg = jnp.take(v_pool, flat, axis=0).reshape(b, maxp * pg, kh, d)
+    g = h // kh
+    qg = q.reshape(b, kh, g, d).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg,
+                        kg.astype(jnp.float32)) * scale
+    valid = jnp.arange(maxp * pg)[None, :] < lengths.reshape(-1, 1)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, vg.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(out_dtype)
+
+
 def blockdiag_rotate_ref(x: jax.Array, rots: jax.Array) -> jax.Array:
     """x: (M, d); rots: (d/b, b, b) — per-block input rotation (OFTv2)."""
     m, d = x.shape

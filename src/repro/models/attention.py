@@ -1,5 +1,7 @@
 """GQA attention: chunked (flash-style online-softmax) training/prefill path,
-and a KV-cache single-token decode path.
+a KV-cache single-token decode path, and block-paged variants of both
+(page-table-indirected writes/gathers, prefix-page + causal-suffix prefill,
+paged decode — see repro.serve.kv_cache for the allocator).
 
 The chunked path never materializes the (S × S) score matrix — mandatory at
 the assigned shapes (train_4k would otherwise need ~400 TB of scores for
@@ -91,6 +93,100 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                        (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
     out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, d)
     return out.astype(q.dtype)
+
+
+def paged_gather(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Contiguous per-row view of a block-paged KV pool.
+
+    pool: (P, pg, KH, D); page_table: (B, maxp) page ids in position order.
+    Returns (B, maxp*pg, KH, D) — row b's token t lives at page
+    page_table[b, t // pg], offset t % pg, so concatenating the pages in
+    table order reproduces the dense cache layout exactly."""
+    b, maxp = page_table.shape
+    g = jnp.take(pool, page_table.reshape(-1), axis=0)
+    return g.reshape(b, maxp * pool.shape[1], *pool.shape[2:])
+
+
+def paged_write(pool: jax.Array, vals: jax.Array, page_table: jax.Array,
+                positions: jax.Array,
+                valid: Optional[jax.Array] = None) -> jax.Array:
+    """Scatter per-token KV into a paged pool through page-table indirection.
+
+    pool: (P, pg, KH, D); vals: (B, S, KH, D); positions: (B, S) absolute
+    token positions; valid: optional (B, S) mask — invalid writes (right-pad
+    tokens past a row's true length) are redirected to the reserved trash
+    page 0, which no attention read ever resolves to a valid position."""
+    pg = pool.shape[1]
+    maxp = page_table.shape[1]
+    pos = jnp.minimum(positions, maxp * pg - 1)
+    page = jnp.take_along_axis(page_table, pos // pg, axis=1)
+    if valid is not None:
+        page = jnp.where(valid, page, 0)
+    off = pos % pg
+    return pool.at[page.reshape(-1), off.reshape(-1)].set(
+        vals.reshape(-1, *vals.shape[2:]).astype(pool.dtype))
+
+
+def paged_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                            k_pref: jax.Array, v_pref: jax.Array,
+                            prefix_len: jax.Array,
+                            expand_kv: bool = False) -> jax.Array:
+    """Suffix-prefill attention: each row attends over its aliased prefix
+    pages plus causally over the suffix it is prefilling.
+
+    q/k/v: (B, S, H|KH, D) post-RoPE suffix projections; k_pref/v_pref:
+    (B, Spre, KH, D) gathered prefix pages; prefix_len: (B,) valid prefix
+    tokens (page-aligned, so suffix row i sits at absolute position
+    prefix_len + i and intra-suffix causality is plain i >= j).  fp32
+    accumulation.  The (S × (Spre+S)) score tile is materialized — serving
+    prefill buckets are max_len-bounded; a chunked/Pallas prefix kernel is
+    the TPU follow-up."""
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    if expand_kv and kh != h:
+        rep = h // kh
+        k, v = jnp.repeat(k, rep, 2), jnp.repeat(v, rep, 2)
+        k_pref = jnp.repeat(k_pref, rep, 2)
+        v_pref = jnp.repeat(v_pref, rep, 2)
+        kh = h
+    g = h // kh
+    spre = k_pref.shape[1]
+    qg = q.reshape(b, s, kh, g, d).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    sp = jnp.einsum("bskgd,bpkd->bskgp", qg,
+                    k_pref.astype(jnp.float32)) * scale
+    pref_ok = jnp.arange(spre)[None, :] < prefix_len[:, None]
+    sp = jnp.where(pref_ok[:, None, None, None, :], sp, NEG_INF)
+    ss = jnp.einsum("bskgd,btkd->bskgt", qg, k.astype(jnp.float32)) * scale
+    causal = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+    ss = jnp.where(causal[None, :, None, None, :], ss, NEG_INF)
+    p = jax.nn.softmax(jnp.concatenate([sp, ss], axis=-1), axis=-1)
+    vcat = jnp.concatenate([v_pref, v], axis=1).astype(jnp.float32)
+    out = jnp.einsum("bskgt,btkd->bskgd", p, vcat)
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, page_table: jax.Array,
+                           lengths, expand_kv: bool = False,
+                           use_kernel: Optional[bool] = None) -> jax.Array:
+    """One-token attention over block-paged KV pools.
+
+    q: (B, 1, H, D); pools: (P, pg, KH, D); page_table: (B, maxp); lengths:
+    () or (B,) valid tokens.  The reference path gathers the row's pages and
+    reuses :func:`decode_attention` — bit-identical to the dense-cache read.
+    On TPU the Pallas kernel (repro.kernels.paged_decode_attention) streams
+    pages by scalar-prefetched page id instead of materializing the gather."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    lengths = jnp.broadcast_to(jnp.asarray(lengths), (q.shape[0],))
+    if use_kernel:
+        from repro.kernels import ops
+        return ops.paged_decode_attention(q[:, 0], k_pool, v_pool,
+                                          page_table, lengths)[:, None]
+    kg = paged_gather(k_pool, page_table)
+    vg = paged_gather(v_pool, page_table)
+    return decode_attention(q, kg, vg, lengths, expand_kv=expand_kv)
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,

@@ -133,20 +133,49 @@ def attn_qkv(params, x, cfg: ModelConfig, compute_dtype, kv_input=None,
 def attn_apply(params, x, cfg: ModelConfig, compute_dtype, causal=True,
                kv_input=None, positions=None, use_rope=True,
                cache: Optional[Dict] = None):
-    """Full-sequence attention; optionally writes a KV cache (prefill)."""
+    """Full-sequence attention; optionally writes a KV cache (prefill).
+
+    ``cache`` is either a dense per-layer ``{"k","v"}`` buffer (right-pad
+    write, the historical contract) or a paged layer view ``{"k","v"`` pools,
+    ``"page_table", "prefix_table", "prefix_len", "lengths"}`` — KV then
+    scatters through page-table indirection and attention runs over each
+    row's aliased prefix pages plus the causal suffix (suffix prefill; with
+    an empty prefix the math reduces to the exact dense chunked path)."""
     if positions is None:
         positions = jnp.arange(x.shape[-2])[None, :]
     q, k, v = attn_qkv(params, x, cfg, compute_dtype, kv_input, positions,
                        use_rope)
     new_cache = None
-    if cache is not None:
+    out = None
+    if cache is not None and "page_table" in cache:
+        valid = jnp.arange(x.shape[-2])[None, :] < \
+            jnp.asarray(cache["lengths"])[:, None]
+        kp = attention.paged_write(cache["k"], k, cache["page_table"],
+                                   positions, valid)
+        vp = attention.paged_write(cache["v"], v, cache["page_table"],
+                                   positions, valid)
+        new_cache = {"k": kp, "v": vp}
+        pre = cache["prefix_table"]
+        if pre.shape[1] != 0:
+            # rows gather their prefix pages post-write; positions past
+            # prefix_len (own suffix pages, trash) mask to exact zeros
+            out = attention.paged_prefill_attention(
+                q, k, v, attention.paged_gather(kp, pre),
+                attention.paged_gather(vp, pre),
+                jnp.asarray(cache["prefix_len"]),
+                expand_kv=_expand_kv_flag(cfg))
+        # else: no aliased prefix anywhere in the batch — fall through to
+        # the SAME chunked path as dense prefill (token-identity with the
+        # dense engine)
+    elif cache is not None:
         s_max = cache["k"].shape[1]
         kp = jnp.pad(k, ((0, 0), (0, s_max - k.shape[1]), (0, 0), (0, 0)))
         vp = jnp.pad(v, ((0, 0), (0, s_max - v.shape[1]), (0, 0), (0, 0)))
         new_cache = {"k": kp.astype(cache["k"].dtype),
                      "v": vp.astype(cache["v"].dtype)}
-    out = attention.chunked_attention(q, k, v, causal=causal,
-                                      expand_kv=_expand_kv_flag(cfg))
+    if out is None:
+        out = attention.chunked_attention(q, k, v, causal=causal,
+                                          expand_kv=_expand_kv_flag(cfg))
     out = out.reshape(*x.shape[:-1], -1)
     y = peft_lib.apply_linear(params["o"], out, cfg.peft, compute_dtype,
                               module="o")
@@ -160,6 +189,12 @@ def attn_decode(params, x_t, cache: Dict, pos, cfg: ModelConfig,
     ``pos`` is a scalar (all rows at one position — the historical contract)
     or a (B,) vector of per-slot positions: each row RoPE-rotates, writes its
     KV at, and attends over its own span (heterogeneous continuous batching).
+
+    ``cache`` is a dense per-layer ``{"k": (B,S,KH,hd), "v": ...}`` buffer or
+    a paged layer view ``{"k","v"`` pools ``(P,pg,KH,hd), "page_table"}`` —
+    the token's KV then writes through page-table indirection and attention
+    runs over the row's page list (gathered on CPU, page-streamed by the
+    Pallas kernel on TPU).
     """
     h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     b = x_t.shape[0]
@@ -190,6 +225,17 @@ def attn_decode(params, x_t, cache: Dict, pos, cfg: ModelConfig,
         posv = positions[:, None]
         q = layers.apply_rope(q, posv, cfg.rope_theta)
         k = layers.apply_rope(k, posv, cfg.rope_theta)
+    if "page_table" in cache:
+        pt = cache["page_table"]
+        k_pool = attention.paged_write(cache["k"], k, pt, positions[:, None])
+        v_pool = attention.paged_write(cache["v"], v, pt, positions[:, None])
+        out = attention.paged_decode_attention(
+            q, k_pool, v_pool, pt, positions + 1,
+            expand_kv=_expand_kv_flag(cfg))
+        out = out.reshape(b, 1, -1)
+        y = peft_lib.apply_linear(params["o"], out, cfg.peft, compute_dtype,
+                                  module="o")
+        return y, {"k": k_pool, "v": v_pool}
     bidx = jnp.arange(b)
     k_cache = cache["k"].at[bidx, positions].set(
         k[:, 0].astype(cache["k"].dtype))
@@ -585,9 +631,26 @@ def forward_logits(params, batch: Dict, cfg: ModelConfig, moe_impl="dense"):
 # caches + prefill + decode
 # ---------------------------------------------------------------------------
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               page_size: Optional[int] = None,
+               num_pages: Optional[int] = None) -> PyTree:
+    """Decode cache tree.  Dense by default: per-slot (batch, max_len) KV
+    buffers.  With ``page_size`` set, returns block-paged pools instead —
+    global ``{"k","v"}: (L, num_pages, page_size, KH, hd)`` buffers whose
+    pages are assigned to slots by an external page table (page 0 is the
+    reserved trash page; see repro.serve.kv_cache for the allocator).
+    ``num_pages`` defaults to dense-equivalent capacity + the trash page."""
     kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
     cdtype = _dt(cfg.dtype)
+    if page_size is not None:
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"paged KV cache supports attention families only, not "
+                f"{cfg.family!r} — SSM/hybrid state caches stay dense")
+        if num_pages is None:
+            num_pages = 1 + batch * -(-max_len // page_size)
+        shape = (cfg.num_layers, num_pages, page_size, kh, hd)
+        return {"k": jnp.zeros(shape, cdtype), "v": jnp.zeros(shape, cdtype)}
 
     def attn_cache():
         return {"k": jnp.zeros((batch, max_len, kh, hd), cdtype),
@@ -685,6 +748,50 @@ def prefill(params, batch: Dict, cfg: ModelConfig, max_len: int,
     return logits, new_caches
 
 
+def paged_prefill(params, batch: Dict, cache: Dict, cfg: ModelConfig,
+                  lengths, prefix_lengths, moe_impl="dense"):
+    """Suffix prefill through block-paged KV indirection.
+
+    ``cache``: ``{"k","v"}`` pools ``(L, P, pg, KH, hd)`` plus
+    ``"page_table"`` (B, maxp) and ``"prefix_table"`` (B, n_pref) — each
+    row's page list and the slice of it covering its aliased shared-prefix
+    pages.  ``batch["tokens"]`` holds ONLY the suffix tokens (right-padded;
+    true lengths in ``lengths``): row i's token j runs at absolute position
+    ``prefix_lengths[i] + j``, writes its KV through the page table, and
+    attends over the aliased prefix pages + the causal suffix — resident
+    prefix pages are never recomputed.  With ``prefix_table`` width 0 this
+    is an ordinary (but page-scattered) full prefill, numerically identical
+    to the dense path.  Returns (last-real-token logits, updated pools)."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"paged prefill supports attention families only, not "
+            f"{cfg.family!r}")
+    compute_dtype = _dt(cfg.dtype)
+    x = _embed_inputs(params, batch, cfg, compute_dtype)
+    s = x.shape[1]
+    lengths = jnp.asarray(lengths)
+    prefix = jnp.asarray(prefix_lengths)
+    positions = prefix[:, None] + jnp.arange(s)[None, :]
+    shared = {"page_table": cache["page_table"],
+              "prefix_table": cache["prefix_table"],
+              "prefix_len": prefix, "lengths": lengths}
+
+    def body(h, xs):
+        lp, kv_l = xs
+        h, _, nc = block_apply(lp, h, cfg, compute_dtype, True, None,
+                               positions, True, cache={**kv_l, **shared},
+                               moe_impl=moe_impl)
+        return h, nc
+    xs = (params["layers"], {"k": cache["k"], "v": cache["v"]})
+    if cfg.scan_layers:
+        x, new_kv = jax.lax.scan(body, x, xs)
+    else:
+        x, new_kv = _unrolled_scan(body, x, xs, cfg.num_layers)
+    x = layers.apply_norm(params["final_norm"], x)
+    logits = lm_logits(params, _last_hidden(x, lengths), cfg)
+    return logits, new_kv
+
+
 def _prefill_recurrent(params, batch, cfg, max_len, compute_dtype,
                        lengths=None):
     """SSM/hybrid prefill: one chunked forward pass; decode caches come from
@@ -736,22 +843,37 @@ def decode_step(params, batch: Dict, cache: PyTree, pos, cfg: ModelConfig,
     ``pos`` is a scalar (legacy: every row at the same position) or a (B,)
     per-slot position vector — the contract heterogeneous continuous batching
     relies on (slots admitted at different times decode at different
-    positions; see repro.serve.engine)."""
+    positions; see repro.serve.engine).
+
+    ``cache`` is the dense tree from :func:`init_cache` or, for attention
+    families, the paged form ``{"k","v"`` pools, ``"page_table"}`` — KV then
+    writes through page-table indirection (the page table is shared across
+    layers, only the pools are layer-stacked)."""
     compute_dtype = _dt(cfg.dtype)
     x = layers.embed_lookup(params["embed"], batch["tokens"], compute_dtype)
     x = shard_act(x, ("batch", None, "embed"))
 
     if cfg.family in ("dense", "moe", "vlm"):
+        paged = isinstance(cache, dict) and "page_table" in cache
+        # paged: only the pools are layer-stacked; the page table is shared
+        # across layers and rides the body closure, re-merged per layer
+        pt = cache["page_table"] if paged else None
+        kv_xs = {"k": cache["k"], "v": cache["v"]} if paged else cache
+
         def body(h, xs):
             lp, cache_l = xs
+            if paged:
+                cache_l = {**cache_l, "page_table": pt}
             h, nc = block_decode(lp, h, cache_l, pos, cfg, compute_dtype,
                                  moe_impl=moe_impl)
             return h, nc
         if cfg.scan_layers:
-            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], kv_xs))
         else:
-            x, new_cache = _unrolled_scan(body, x, (params["layers"], cache),
+            x, new_cache = _unrolled_scan(body, x, (params["layers"], kv_xs),
                                           cfg.num_layers)
+        if paged:
+            new_cache = {**new_cache, "page_table": pt}
     elif cfg.family == "audio":
         cross = cache["cross"]
 
@@ -946,7 +1068,12 @@ def cache_axes(cfg: ModelConfig, cache: PyTree) -> PyTree:
     def assign(kp, leaf):
         names = _path_names(kp)
         n = names[-1]
-        if n in ("k", "v"):
+        if n == "page_table":
+            role = (None,) * leaf.ndim
+        elif n in ("k", "v"):
+            # NOTE: paged pools (L, P, pg, KH, hd) alias through this arm
+            # too, mapping "batch" onto the page axis; shard paged pools
+            # manually if distributing them
             role = ("batch", "cache_seq", "kv_heads", None)
         elif n == "conv_state":
             role = ("batch", None, "conv_ch")

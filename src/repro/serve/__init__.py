@@ -1,1 +1,2 @@
 from repro.serve.engine import BASE_ADAPTER, Request, ServeEngine  # noqa: F401
+from repro.serve.kv_cache import OutOfPages, PagedKVCache  # noqa: F401

@@ -1,5 +1,5 @@
 """Serving engine: batched prefill + KV-cache decode with per-slot
-heterogeneous-adapter continuous batching.
+heterogeneous-adapter continuous batching over a block-paged KV cache.
 
 The engine keeps ONE merged base tree (the reparameterization-methods
 property: PSOFT-family adapters fold into plain weights) plus a stacked
@@ -12,6 +12,16 @@ forward pass, so one decode step serves slots on different adapters and one
 freed slot is refilled immediately — no adapter-homogeneous waves, no
 inter-wave draining.  Decode likewise takes per-slot positions: each slot
 RoPE-rotates, writes KV, and attends over its own span.
+
+KV memory is block-paged (attention families; SSM/hybrid state caches stay
+dense): instead of a dense ``(slots, max_len)`` buffer per layer, slots own
+refcounted pages of a global pool (:class:`repro.serve.kv_cache.PagedKVCache`)
+— admission allocates exactly ``ceil(len/page)`` pages, completion frees
+them, and admissions whose prompt prefix hashes to resident full pages ALIAS
+those pages instead of re-prefilling them (suffix-only prefill,
+copy-on-extend at the boundary page).  Cache memory therefore scales with
+live tokens, not ``slots x max_len``, which is what caps slot count at
+production batch sizes.
 
 All requests share one compiled prefill executable per prompt bucket and one
 decode executable; adding an adapter grows the bank (a recompile), serving it
@@ -30,9 +40,13 @@ import numpy as np
 from repro.configs.base import ModelConfig, PEFTConfig
 from repro.core import peft as peft_lib, registry as peft_registry
 from repro.models import model as model_lib
+from repro.serve.kv_cache import OutOfPages, PagedKVCache
 
 #: adapter name every request uses unless it asks for something else
 BASE_ADAPTER = "base"
+
+#: families with attention KV caches the paged path can serve
+_PAGED_FAMILIES = ("dense", "moe", "vlm")
 
 #: module names the bank path can serve: every logical linear the model
 #: routes through peft.apply_linear.  "router" is excluded — moe_apply reads
@@ -49,6 +63,9 @@ class Request:
     adapter: str = BASE_ADAPTER     # which registered adapter serves this
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    #: run() hit max_steps before this request finished (generated holds the
+    #: partial output; done stays False)
+    truncated: bool = False
 
 
 class ServeEngine:
@@ -58,11 +75,24 @@ class ServeEngine:
     ``"base"`` adapter.  More adapters — independently fine-tuned param trees
     over the same architecture — join via :meth:`register_adapter`; a decode
     step serves any mix of them, one per slot.
+
+    ``cache_mode``: ``"paged"`` (block-paged KV + shared-prefix reuse),
+    ``"dense"`` (one (slots, max_len) buffer per layer — the baseline the
+    paged path is token-identical to), or ``"auto"`` (paged for attention
+    families, dense for SSM/hybrid whose recurrent states don't page).
+
+    ``greedy=False`` samples with ``temperature`` from a generator seeded by
+    ``sample_seed`` (one host-side draw per generated token, deterministic
+    for a fixed workload); ``greedy=True`` argmaxes, bit-identically to the
+    historical engine.
     """
 
     def __init__(self, params, cfg: ModelConfig, max_len: int = 256,
                  slots: int = 4, greedy: bool = True,
-                 use_fused_kernel: bool = False):
+                 use_fused_kernel: bool = False, cache_mode: str = "auto",
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 retain_prefix_cache: bool = True, temperature: float = 1.0,
+                 sample_seed: int = 0):
         # serving config: every linear is a plain {"w"} (+bank) after merging
         self.cfg = dataclasses.replace(
             cfg, peft=PEFTConfig(method="none", target_modules=(),
@@ -74,11 +104,29 @@ class ServeEngine:
             BASE_ADAPTER: (params, cfg.peft)}
         self.adapters: Dict[str, object] = {
             BASE_ADAPTER: peft_lib.merge_tree(params, cfg.peft)}
-        self._order: List[str] = [BASE_ADAPTER]   # name -> bank index
+        self._order: List[str] = [BASE_ADAPTER]   # bank index -> name
+        self._adapter_index: Dict[str, int] = {BASE_ADAPTER: 0}
         self._serve_tree = None                   # rebuilt lazily on register
         self.max_len = max_len
         self.slots = slots
         self.greedy = greedy
+        self.temperature = temperature
+        self._rng = np.random.default_rng(sample_seed)
+
+        if cache_mode == "auto":
+            cache_mode = ("paged" if cfg.family in _PAGED_FAMILIES
+                          else "dense")
+        if cache_mode == "paged" and cfg.family not in _PAGED_FAMILIES:
+            raise ValueError(
+                f"cache_mode='paged' supports attention families "
+                f"{_PAGED_FAMILIES}, not {cfg.family!r} — SSM/hybrid state "
+                f"caches stay dense (use cache_mode='dense' or 'auto')")
+        self.cache_mode = cache_mode
+        self.kv: Optional[PagedKVCache] = None
+        if cache_mode == "paged":
+            self.kv = PagedKVCache(self.cfg, slots, max_len,
+                                   page_size=page_size, num_pages=num_pages,
+                                   retain_prefix_cache=retain_prefix_cache)
 
         def _decode(p, b, c, positions, ids):
             with peft_registry.batched_adapter_ids(ids):
@@ -94,9 +142,22 @@ class ServeEngine:
                 return model_lib.prefill(p, b, self.cfg, max_len,
                                          moe_impl="dense", lengths=lengths)
 
-        self._decode = jax.jit(_decode)
+        def _prefill_paged(p, b, pools, pt, pre_pt, lengths, prefix, ids):
+            with peft_registry.batched_adapter_ids(ids):
+                cache = {"k": pools["k"], "v": pools["v"], "page_table": pt,
+                         "prefix_table": pre_pt}
+                return model_lib.paged_prefill(p, b, cache, self.cfg,
+                                               lengths, prefix,
+                                               moe_impl="dense")
+
+        # donate the cache/pool buffers so XLA updates KV in place instead
+        # of double-buffering the whole pool every step (donation is a no-op
+        # on CPU and would only warn, so gate it)
+        donate = (2,) if jax.default_backend() != "cpu" else ()
+        self._decode = jax.jit(_decode, donate_argnums=donate)
         self._prefill = jax.jit(_prefill)
-        self.cache = None
+        self._prefill_paged = jax.jit(_prefill_paged, donate_argnums=donate)
+        self.cache = None           # dense-mode cache tree
         self.positions = np.zeros((slots,), np.int32)
         self.active: List[Optional[Request]] = [None] * slots
         #: (step, slot, uid, live uids in OTHER slots at admission time) —
@@ -121,7 +182,8 @@ class ServeEngine:
         pc = peft_cfg if peft_cfg is not None else self.base_peft
         self._sources[name] = (params, pc)
         self.adapters[name] = peft_lib.merge_tree(params, pc)
-        if name not in self._order:
+        if name not in self._adapter_index:
+            self._adapter_index[name] = len(self._order)
             self._order.append(name)
         self._serve_tree = None    # bank shape changed -> rebuild + recompile
 
@@ -137,8 +199,12 @@ class ServeEngine:
                 f"{self.list_adapters()}") from None
 
     def _adapter_id(self, name: str) -> int:
-        self._adapter_params(name)  # fail fast on unknown names
-        return self._order.index(name)
+        """name -> bank index, O(1) (called per live slot per decode step)."""
+        try:
+            return self._adapter_index[name]
+        except KeyError:
+            self._adapter_params(name)   # raises the descriptive KeyError
+            raise
 
     # -- adapter bank ------------------------------------------------------
     def _banked_tree(self):
@@ -207,6 +273,20 @@ class ServeEngine:
                 f"(see docs/serving.md).")
         return self._serve_tree
 
+    # -- sampling ----------------------------------------------------------
+    def _select_token(self, row: np.ndarray) -> int:
+        """Next token from one row of last-position logits (vocab-truncated).
+
+        Greedy argmax by default (bit-identical to the historical engine);
+        with ``greedy=False``, a seeded host-side temperature draw."""
+        if self.greedy:
+            return int(row.argmax())
+        z = row.astype(np.float64) / max(float(self.temperature), 1e-6)
+        z -= z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(self._rng.choice(row.shape[-1], p=p))
+
     # -- admission ---------------------------------------------------------
     def _bucket(self, plen: int) -> int:
         """Prefill padding bucket.  Attention families right-pad to an
@@ -218,46 +298,119 @@ class ServeEngine:
             return plen
         return min(self.max_len, ((plen + 7) // 8) * 8)
 
+    def _record_admissions(self, step: int, group, next_tokens) -> None:
+        for j, (slot, r, _pref) in enumerate(group):
+            others = [q.uid for i, q in enumerate(self.active)
+                      if q is not None and i != slot]
+            self.active[slot] = r
+            r.generated.append(int(next_tokens[j]))
+            self.positions[slot] = len(r.prompt)
+            self.admission_log.append((step, slot, r.uid, others))
+
     def _admit(self, queue: List[Request], step: int):
         """Fill every free slot immediately.
 
         Admission is per-slot and adapter-heterogeneous: freed slots take the
         queue head regardless of which adapters the other slots are
         mid-decode on.  Same-step admissions sharing a padding bucket prefill
-        as one batch (per-row ``lengths``/``adapter_ids``)."""
+        as one batch (per-row ``lengths``/``adapter_ids``).  In paged mode a
+        request that doesn't fit the page pool stays queued (admission
+        retries as running slots free pages)."""
         free = [i for i in range(self.slots) if self.active[i] is None]
         if not free or not queue:
             return
         tree = self._banked_tree()
-        admitted = [(slot, queue.pop(0))
+        if self.cache_mode == "paged":
+            self._admit_paged(tree, free, queue, step)
+        else:
+            self._admit_dense(tree, free, queue, step)
+
+    def _admit_dense(self, tree, free, queue: List[Request], step: int):
+        admitted = [(slot, queue.pop(0), 0)
                     for slot in free[:len(queue)]]
-        groups: Dict[int, List[Tuple[int, Request]]] = {}
-        for slot, r in admitted:
+        groups: Dict[int, list] = {}
+        for slot, r, pref in admitted:
             groups.setdefault(self._bucket(len(r.prompt)), []).append(
-                (slot, r))
+                (slot, r, pref))
         for bucket, group in groups.items():
             toks = np.zeros((len(group), bucket), np.int32)
             lens = np.zeros((len(group),), np.int32)
             ids = np.zeros((len(group),), np.int32)
-            for j, (slot, r) in enumerate(group):
+            for j, (slot, r, _pref) in enumerate(group):
                 toks[j, :len(r.prompt)] = r.prompt
                 lens[j] = len(r.prompt)
                 ids[j] = self._adapter_id(r.adapter)
             logits, cache = self._prefill(
                 tree, {"tokens": jnp.asarray(toks)}, jnp.asarray(lens),
                 jnp.asarray(ids))
-            nxt = np.asarray(jnp.argmax(
-                logits[:, -1, :self.cfg.vocab_size], -1))
-            for j, (slot, r) in enumerate(group):
-                others = [q.uid for i, q in enumerate(self.active)
-                          if q is not None and i != slot]
-                self.active[slot] = r
-                r.generated.append(int(nxt[j]))
-                self.positions[slot] = len(r.prompt)
+            rows = np.asarray(logits[:, -1, :self.cfg.vocab_size])
+            nxt = [self._select_token(rows[j]) for j in range(len(group))]
+            for j, (slot, r, _pref) in enumerate(group):
                 self._install_cache(slot, cache, j)
-                self.admission_log.append((step, slot, r.uid, others))
+            self._record_admissions(step, group, nxt)
+
+    def _admit_paged(self, tree, free, queue: List[Request], step: int):
+        kv = self.kv
+        admitted = []
+        while free and queue:
+            r = queue[0]
+            prompt = np.asarray(r.prompt, np.int32)
+            # reserve the worst-case footprint so a mid-decode page-boundary
+            # crossing can never hit an empty pool (decode stops one short
+            # of max_len, so max_len tokens always suffice)
+            reserve = min(len(prompt) + r.max_new_tokens, self.max_len)
+            try:
+                prefix = kv.admit(free[0], prompt, r.adapter,
+                                  reserve_tokens=reserve)
+            except OutOfPages:
+                break              # retry after running slots free pages
+            admitted.append((free.pop(0), queue.pop(0), prefix))
+        if not admitted and not any(r is not None for r in self.active):
+            raise OutOfPages(
+                f"request {queue[0].uid} (prompt {len(queue[0].prompt)} "
+                f"tokens) cannot fit an idle page pool of "
+                f"{kv.num_pages - 1} pages x {kv.page_size}")
+        # group by SUFFIX bucket: rows aliasing a resident prefix prefill
+        # only their remaining tokens
+        groups: Dict[int, list] = {}
+        for slot, r, prefix in admitted:
+            groups.setdefault(self._bucket(len(r.prompt) - prefix),
+                              []).append((slot, r, prefix))
+        for bucket, group in groups.items():
+            g = len(group)
+            toks = np.zeros((g, bucket), np.int32)
+            lens = np.zeros((g,), np.int32)
+            prefs = np.zeros((g,), np.int32)
+            ids = np.zeros((g,), np.int32)
+            rows_pt = np.zeros((g, kv.pages_per_slot), np.int32)
+            for j, (slot, r, prefix) in enumerate(group):
+                suffix = np.asarray(r.prompt, np.int32)[prefix:]
+                toks[j, :len(suffix)] = suffix
+                lens[j] = len(suffix)
+                prefs[j] = prefix
+                ids[j] = self._adapter_id(r.adapter)
+                rows_pt[j] = kv.tables[slot]
+            # prefix-table width is 0 (no aliasing in the group: the prefill
+            # reduces to the exact dense chunked path) or full — two
+            # executables per (bucket, group-size), not one per distinct
+            # prefix length; rows gather their whole table, masked by
+            # prefix_len
+            n_pref = kv.pages_per_slot if prefs.max() else 0
+            logits, new_pools = self._prefill_paged(
+                tree, {"tokens": jnp.asarray(toks)}, kv.pools,
+                jnp.asarray(rows_pt), jnp.asarray(rows_pt[:, :n_pref]),
+                jnp.asarray(lens), jnp.asarray(prefs), jnp.asarray(ids))
+            kv.pools = new_pools
+            rows = np.asarray(logits[:, -1, :self.cfg.vocab_size])
+            nxt = [self._select_token(rows[j]) for j in range(g)]
+            for slot, r, _pref in group:
+                kv.commit_prompt(slot, np.asarray(r.prompt, np.int32),
+                                 r.adapter)
+            self._record_admissions(step, group, nxt)
 
     def _install_cache(self, slot: int, cache, j: int):
+        """Dense mode only: copy prefill row ``j`` into slot ``slot`` of the
+        engine-wide cache (paged mode allocates pages instead)."""
         sliced = jax.tree.map(lambda x: x[:, j:j + 1] if x.ndim > 1 else x,
                               cache)
         if self.cache is None:
@@ -271,8 +424,44 @@ class ServeEngine:
                 if full.ndim > 1 else full, self.cache, sliced)
 
     # -- main loop ----------------------------------------------------------
+    def _decode_live(self, tree, live: List[int]):
+        """One decode step over every live slot; returns last-pos logits."""
+        toks = np.zeros((self.slots, 1), np.int32)
+        ids = np.zeros((self.slots,), np.int32)
+        for i in live:
+            toks[i, 0] = self.active[i].generated[-1]
+            ids[i] = self._adapter_id(self.active[i].adapter)
+        if self.cache_mode == "paged":
+            for i in live:   # page for this step's KV write
+                self.kv.ensure_position(i, int(self.positions[i]))
+            cache = {"k": self.kv.pools["k"], "v": self.kv.pools["v"],
+                     "page_table": self.kv.table_jax()}
+            logits, new_cache = self._decode(
+                tree, {"tokens": jnp.asarray(toks)}, cache,
+                jnp.asarray(self.positions), jnp.asarray(ids))
+            self.kv.pools = {"k": new_cache["k"], "v": new_cache["v"]}
+        else:
+            logits, self.cache = self._decode(
+                tree, {"tokens": jnp.asarray(toks)}, self.cache,
+                jnp.asarray(self.positions), jnp.asarray(ids))
+        return np.asarray(logits[:, -1, :self.cfg.vocab_size])
+
+    def _finish_slot(self, slot: int, finished: List[Request]):
+        self.active[slot].done = True
+        finished.append(self.active[slot])
+        self.active[slot] = None
+        if self.cache_mode == "paged":
+            self.kv.free_slot(slot)
+
     def run(self, requests: List[Request], max_steps: int = 512,
             ) -> List[Request]:
+        """Serve ``requests`` to completion (or ``max_steps``).
+
+        EVERY request comes back: finished ones with ``done=True``, and — if
+        the step budget ran out — still-active and still-queued ones with
+        ``done=False, truncated=True`` (partial ``generated`` preserved, a
+        warning emitted, ``last_run_truncated`` set).  Truncated slots are
+        drained and their pages freed, so the engine is reusable."""
         queue = list(requests)
         for r in queue:
             self._adapter_params(r.adapter)  # fail fast on unknown adapters
@@ -281,37 +470,63 @@ class ServeEngine:
                     f"request {r.uid}: prompt length {len(r.prompt)} must be "
                     f"in [1, max_len) = [1, {self.max_len}) — the slot needs "
                     f"at least one free cache position to decode into")
+            if self.cache_mode == "paged":
+                # fail fast on requests that can never fit: an idle pool can
+                # always reclaim every retained page, so num_pages - 1 is
+                # the hard ceiling (an infeasible FIFO head would otherwise
+                # starve the queue behind it forever)
+                reserve = min(len(r.prompt) + r.max_new_tokens, self.max_len)
+                need = -(-reserve // self.kv.page_size)
+                if need > self.kv.num_pages - 1:
+                    raise ValueError(
+                        f"request {r.uid}: worst-case footprint of {need} "
+                        f"pages exceeds the pool ({self.kv.num_pages - 1} "
+                        f"non-trash pages of {self.kv.page_size}) — grow "
+                        f"num_pages or shrink max_new_tokens")
         tree = self._banked_tree()
         finished: List[Request] = []
         steps = 0
+        max_live = 0
         while (queue or any(r is not None for r in self.active)) \
                 and steps < max_steps:
             steps += 1
             self._admit(queue, steps)
             live = [i for i, r in enumerate(self.active) if r is not None]
+            max_live = max(max_live, len(live))
             if not live:
                 continue
-            toks = np.zeros((self.slots, 1), np.int32)
-            ids = np.zeros((self.slots,), np.int32)
-            for i in live:
-                toks[i, 0] = self.active[i].generated[-1]
-                ids[i] = self._adapter_id(self.active[i].adapter)
-            logits, self.cache = self._decode(
-                tree, {"tokens": jnp.asarray(toks)}, self.cache,
-                jnp.asarray(self.positions), jnp.asarray(ids))
-            nxt = np.asarray(jnp.argmax(
-                logits[:, -1, :self.cfg.vocab_size], -1))
+            rows = self._decode_live(tree, live)
             for i in live:
                 r = self.active[i]
-                r.generated.append(int(nxt[i]))
+                r.generated.append(self._select_token(rows[i]))
                 self.positions[i] += 1
                 if (len(r.generated) >= r.max_new_tokens
                         or self.positions[i] >= self.max_len - 1):
-                    r.done = True
-                    finished.append(r)
-                    self.active[i] = None
+                    self._finish_slot(i, finished)
         #: engine iterations the last run() took — the deterministic
         #: wave-serialization metric (a wave engine pays ~one full
         #: prefill+decode pass per adapter switch; per-slot batching doesn't)
         self.last_run_steps = steps
+        #: peak concurrently-live slots (capacity metric for bench_paged_kv)
+        self.last_run_max_live = max_live
+        self.last_run_truncated = bool(
+            queue or any(r is not None for r in self.active))
+        if self.last_run_truncated:
+            n_active = sum(r is not None for r in self.active)
+            warnings.warn(
+                f"run() hit max_steps={max_steps} with {n_active} active and "
+                f"{len(queue)} queued requests; returning them as partials "
+                f"(done=False, truncated=True)")
+            for i, r in enumerate(self.active):
+                if r is None:
+                    continue
+                r.truncated = True
+                finished.append(r)
+                self.active[i] = None
+                if self.cache_mode == "paged":
+                    self.kv.free_slot(i)
+            for r in queue:
+                r.truncated = True
+                finished.append(r)
+            queue.clear()
         return finished

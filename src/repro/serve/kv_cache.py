@@ -1,0 +1,258 @@
+"""Block-paged KV cache: free-list page allocator, refcounted page tables,
+and content-hash shared-prefix reuse.
+
+The device side is a pair of global ``{"k","v"}`` pools of shape
+``(L, num_pages, page_size, KH, hd)`` (built by ``model.init_cache`` with
+``page_size=``); every serving slot owns an ordered list of page ids — its
+row of ``tables`` — and the model's paged prefill/decode paths read and
+write KV exclusively through that indirection.  The host side (this class)
+is the allocator:
+
+* **free list** — page ids are popped at admission (which reserves the
+  request's worst-case footprint, so decode never faults) and pushed back
+  when the last reference drops.  Page 0 is
+  the reserved TRASH page: unallocated table entries point at it, right-pad
+  prefill writes are redirected to it, and no attention read ever resolves
+  it to a valid position.
+* **refcounts** — pages are shared across slots (prefix reuse), so frees
+  decrement; only the last owner returns a page to the free list.
+* **prefix registry** — after a prompt is prefilled, each of its *fully
+  prompt-covered* pages is registered under the cumulative content hash of
+  (adapter, prompt[:page_end]).  A later admission whose prompt chains
+  through resident hashes aliases those pages (refcount++) instead of
+  re-prefilling them; its suffix prefill attends over them read-only.  The
+  hash covers the entire prefix (not just the page's own tokens) because a
+  page's KV depends causally on everything before it — and includes the
+  adapter name, because K/V projections differ per adapter.
+* **copy-on-extend** — sharing is capped at ``(len(prompt) - 1) // page``
+  full pages, so every admission prefills >= 1 suffix token and the page a
+  slot will *write* into (prompt tail + generated tokens) is always freshly
+  allocated, never an alias; the capped boundary page is recomputed into the
+  slot's own copy rather than mutating the shared resident one.
+* **retention** — with ``retain_prefix_cache`` (default), registered pages
+  whose refcount drops to 0 stay resident in an LRU pool and are evicted
+  only when the free list runs dry, so sequential same-prefix traffic hits
+  too, not just concurrent traffic.
+
+Allocation failure raises :class:`OutOfPages`; the engine responds by
+deferring admission until running slots free pages (preemption is the
+follow-up, see ROADMAP).
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+
+#: reserved page id no slot ever owns; all masked/unallocated refs land here
+TRASH_PAGE = 0
+
+
+class OutOfPages(RuntimeError):
+    """Every non-trash page is referenced; admission must wait for frees."""
+
+
+class PagedKVCache:
+    """Host-side page allocator over device-side paged KV pools."""
+
+    def __init__(self, cfg: ModelConfig, slots: int, max_len: int,
+                 page_size: int = 16, num_pages: int = None,
+                 retain_prefix_cache: bool = True):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.page_size = int(page_size)
+        self.pages_per_slot = -(-max_len // self.page_size)
+        if num_pages is None:
+            num_pages = 1 + slots * self.pages_per_slot
+        if num_pages < 2:
+            raise ValueError("need at least one non-trash page")
+        self.num_pages = int(num_pages)
+        self.slots = slots
+        self.max_len = max_len
+        self.retain = retain_prefix_cache
+        #: {"k","v"}: (L, num_pages, page_size, KH, hd) device pools
+        self.pools = model_lib.init_cache(cfg, slots, max_len,
+                                          page_size=self.page_size,
+                                          num_pages=self.num_pages)
+        #: per-slot page lists, position-ordered; TRASH_PAGE = unallocated
+        self.tables = np.zeros((slots, self.pages_per_slot), np.int32)
+        self.n_pages = np.zeros((slots,), np.int32)
+        self._owned: List[List[int]] = [[] for _ in range(slots)]
+        self.refcount = np.zeros((self.num_pages,), np.int32)
+        self._free: List[int] = list(range(self.num_pages - 1, 0, -1))
+        self._hash_to_page: Dict[str, int] = {}
+        self._page_to_hash: Dict[int, str] = {}
+        #: refcount-0 registered pages kept resident, LRU order
+        self._reusable: "OrderedDict[int, None]" = OrderedDict()
+        self.stats = {"prefix_queries": 0, "prefix_hits": 0,
+                      "pages_aliased": 0, "pages_allocated": 0,
+                      "evictions": 0}
+
+    # -- hashing -----------------------------------------------------------
+    def _page_hashes(self, prompt: np.ndarray, adapter_key: str) -> List[str]:
+        """Cumulative content hash per FULL page of ``prompt``."""
+        hasher = hashlib.blake2b(repr(adapter_key).encode())
+        out = []
+        for i in range(len(prompt) // self.page_size):
+            page = np.ascontiguousarray(
+                prompt[i * self.page_size:(i + 1) * self.page_size],
+                dtype=np.int32)
+            hasher.update(page.tobytes())
+            out.append(hasher.hexdigest())
+        return out
+
+    # -- allocation --------------------------------------------------------
+    def _alloc(self) -> int:
+        if self._free:
+            p = self._free.pop()
+        elif self._reusable:
+            p, _ = self._reusable.popitem(last=False)   # LRU evict
+            h = self._page_to_hash.pop(p, None)
+            if h is not None:
+                self._hash_to_page.pop(h, None)
+            self.stats["evictions"] += 1
+        else:
+            raise OutOfPages(
+                f"all {self.num_pages - 1} KV pages referenced "
+                f"({self.pages_in_use()} live)")
+        self.refcount[p] = 1
+        self.stats["pages_allocated"] += 1
+        return p
+
+    def _acquire(self, p: int) -> None:
+        if self.refcount[p] == 0:
+            self._reusable.pop(p, None)
+        self.refcount[p] += 1
+
+    def _release(self, p: int) -> None:
+        self.refcount[p] -= 1
+        if self.refcount[p] > 0:
+            return
+        h = self._page_to_hash.get(p)
+        if h is not None and self.retain:
+            self._reusable[p] = None     # stays resident for prefix hits
+        else:
+            if h is not None:
+                self._page_to_hash.pop(p)
+                self._hash_to_page.pop(h, None)
+            self._free.append(p)
+
+    # -- slot lifecycle ----------------------------------------------------
+    def admit(self, slot: int, prompt: np.ndarray, adapter_key: str,
+              reserve_tokens: int = None) -> int:
+        """Build ``slot``'s page table for ``prompt``: alias every resident
+        shared-prefix page, allocate fresh pages for the rest.
+
+        ``reserve_tokens`` (default: the prompt length) is the request's
+        worst-case footprint — pages covering it are allocated up front so a
+        mid-decode page-boundary crossing can never hit an empty pool (the
+        engine reserves ``min(len + max_new, max_len)``; relaxing this to
+        on-demand growth is what preemption will buy).
+
+        Returns the aliased prefix length in TOKENS (a page multiple, capped
+        so >= 1 suffix token remains to prefill).  Raises :class:`OutOfPages`
+        with no state change if the fresh pages don't fit."""
+        assert self.n_pages[slot] == 0 and not self._owned[slot], \
+            f"slot {slot} not freed before re-admission"
+        n = len(prompt)
+        if n > self.pages_per_slot * self.page_size:
+            raise ValueError(
+                f"prompt of {n} tokens exceeds slot capacity "
+                f"{self.pages_per_slot * self.page_size}")
+        reserve = n if reserve_tokens is None else max(n, reserve_tokens)
+        reserve = min(reserve, self.pages_per_slot * self.page_size)
+        need = -(-reserve // self.page_size)
+        hashes = self._page_hashes(prompt, adapter_key)
+        max_share = (n - 1) // self.page_size
+        shared: List[int] = []
+        self.stats["prefix_queries"] += 1
+        for i in range(min(len(hashes), max_share)):
+            p = self._hash_to_page.get(hashes[i])
+            if p is None:
+                break
+            shared.append(p)
+        # acquire the aliases BEFORE allocating fresh pages: a retained
+        # (refcount-0) prefix page sits in the eviction pool, and _alloc
+        # could otherwise evict and re-hand-out the very page being aliased
+        # — one page id twice in the slot's table, suffix writes clobbering
+        # prefix KV
+        for p in shared:
+            self._acquire(p)
+        # capacity check BEFORE touching the eviction pool: a failing admit
+        # must not flush retained prefix pages (and their registrations) it
+        # then can't use
+        n_fresh = need - len(shared)
+        if n_fresh > len(self._free) + len(self._reusable):
+            for p in shared:
+                self._release(p)
+            raise OutOfPages(
+                f"{n_fresh} pages needed, "
+                f"{len(self._free) + len(self._reusable)} allocatable "
+                f"({self.pages_in_use()} of {self.num_pages - 1} referenced)")
+        fresh = [self._alloc() for _ in range(n_fresh)]
+        if shared:
+            self.stats["prefix_hits"] += 1
+            self.stats["pages_aliased"] += len(shared)
+        row = shared + fresh
+        assert len(set(row)) == len(row), \
+            f"duplicate page id in slot {slot} table: {row}"
+        self.tables[slot, :len(row)] = row
+        self.n_pages[slot] = len(row)
+        self._owned[slot] = list(row)
+        return len(shared) * self.page_size
+
+    def commit_prompt(self, slot: int, prompt: np.ndarray,
+                      adapter_key: str) -> None:
+        """Register ``slot``'s fully-prompt-covered pages for later sharing.
+        Call AFTER the prefill that filled them has run — a registered page
+        must be complete before another slot may alias it."""
+        for i, h in enumerate(self._page_hashes(prompt, adapter_key)):
+            p = int(self.tables[slot, i])
+            if h in self._hash_to_page or p in self._page_to_hash:
+                continue                  # already registered (e.g. aliased)
+            self._hash_to_page[h] = p
+            self._page_to_hash[p] = h
+
+    def ensure_position(self, slot: int, pos: int) -> None:
+        """Allocate pages so ``slot`` can write KV at position ``pos``.
+        A no-op when admission reserved the full footprint; the safety net
+        for callers that admit with prompt-only reservations."""
+        idx = pos // self.page_size
+        if idx >= self.pages_per_slot:
+            raise OutOfPages(
+                f"position {pos} beyond slot capacity "
+                f"{self.pages_per_slot * self.page_size}")
+        while self.n_pages[slot] <= idx:
+            p = self._alloc()
+            self.tables[slot, self.n_pages[slot]] = p
+            self._owned[slot].append(p)
+            self.n_pages[slot] += 1
+
+    def free_slot(self, slot: int) -> None:
+        for p in self._owned[slot]:
+            self._release(p)
+        self._owned[slot] = []
+        self.n_pages[slot] = 0
+        self.tables[slot, :] = TRASH_PAGE
+
+    # -- views / accounting ------------------------------------------------
+    def table_jax(self) -> jnp.ndarray:
+        return jnp.asarray(self.tables)
+
+    def pages_in_use(self) -> int:
+        """Pages currently referenced by >= 1 slot (excludes retained)."""
+        return int((self.refcount > 0).sum())
+
+    def pages_resident(self) -> int:
+        """Referenced + retained-for-reuse pages."""
+        return self.pages_in_use() + len(self._reusable)
+
+    def prefix_hit_ratio(self) -> float:
+        q = self.stats["prefix_queries"]
+        return self.stats["prefix_hits"] / q if q else 0.0
