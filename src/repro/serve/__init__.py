@@ -1,2 +1,4 @@
 from repro.serve.engine import BASE_ADAPTER, Request, ServeEngine  # noqa: F401
-from repro.serve.kv_cache import OutOfPages, PagedKVCache  # noqa: F401
+from repro.serve.kv_cache import (  # noqa: F401
+    OutOfPages, PagedKVCache, TRASH_PAGE)
+from repro.serve.scheduler import StreamScheduler  # noqa: F401

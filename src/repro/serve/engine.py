@@ -23,6 +23,20 @@ copy-on-extend at the boundary page).  Cache memory therefore scales with
 live tokens, not ``slots x max_len``, which is what caps slot count at
 production batch sizes.
 
+Admission is streaming (:meth:`ServeEngine.run_stream`): requests are
+``submit()``-ed as they arrive — mid-run included — and a
+:class:`repro.serve.scheduler.StreamScheduler` picks what each free slot
+serves next (priority/deadline ordering, bounded out-of-order lookahead so a
+large infeasible head cannot starve small requests behind it).  Under page
+pressure the scheduler closes the loop with the paged cache: a
+deadline-at-risk request that cannot get pages SUSPENDS the lowest-priority
+running slot (``PagedKVCache.suspend_slot`` parks its computed KV in the
+retained-prefix pool; ``resume_slot`` later re-aliases whatever stayed
+resident and re-prefills only the evicted tail).  The historical static API
+:meth:`ServeEngine.run` is a thin wrapper — every request arrives at step 0,
+strict FIFO, worst-case page reservation, no preemption — and stays
+token-identical to the pre-streaming engine.
+
 All requests share one compiled prefill executable per prompt bucket and one
 decode executable; adding an adapter grows the bank (a recompile), serving it
 costs a gather.
@@ -31,7 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +54,8 @@ import numpy as np
 from repro.configs.base import ModelConfig, PEFTConfig
 from repro.core import peft as peft_lib, registry as peft_registry
 from repro.models import model as model_lib
-from repro.serve.kv_cache import OutOfPages, PagedKVCache
+from repro.serve.kv_cache import OutOfPages, PagedKVCache, TRASH_PAGE
+from repro.serve.scheduler import StreamScheduler
 
 #: adapter name every request uses unless it asks for something else
 BASE_ADAPTER = "base"
@@ -61,11 +76,41 @@ class Request:
     prompt: np.ndarray              # (S,) int32
     max_new_tokens: int = 16
     adapter: str = BASE_ADAPTER     # which registered adapter serves this
+    #: scheduling weight: higher-priority requests are admitted first and
+    #: may preempt lower-priority running slots under page pressure
+    priority: int = 0
+    #: SLO: finish within this many engine steps of arrival (None = no SLO)
+    deadline_steps: Optional[int] = None
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     #: run() hit max_steps before this request finished (generated holds the
     #: partial output; done stays False)
     truncated: bool = False
+    #: streaming bookkeeping, stamped by the engine: the step the request
+    #: entered the queue / was first admitted / finished, and how many times
+    #: it was preempted (suspended + resumed) along the way
+    arrival_step: int = 0
+    admit_step: Optional[int] = None
+    finish_step: Optional[int] = None
+    preemptions: int = 0
+
+    @property
+    def queueing_delay(self) -> Optional[int]:
+        """Engine steps spent waiting for first admission (None: never
+        admitted)."""
+        if self.admit_step is None:
+            return None
+        return self.admit_step - self.arrival_step
+
+    @property
+    def slo_met(self) -> Optional[bool]:
+        """Whether the request finished inside its deadline (None: no
+        deadline was set; False also covers never-finished)."""
+        if self.deadline_steps is None:
+            return None
+        if self.finish_step is None:
+            return False
+        return self.finish_step - self.arrival_step <= self.deadline_steps
 
 
 class ServeEngine:
@@ -164,6 +209,18 @@ class ServeEngine:
         #: observability hook: non-empty other-lives prove a freed slot was
         #: refilled while the rest of the batch was mid-decode
         self.admission_log: List[Tuple[int, int, int, List[int]]] = []
+        #: (step, slot, uid) per suspension — the preemption audit trail
+        self.preemption_log: List[Tuple[int, int, int]] = []
+        #: streaming admission policy; run() pins it to strict FIFO,
+        #: run_stream() reconfigures it per call
+        self.scheduler = StreamScheduler()
+        self._step = 0              # current engine step (0 when idle)
+        #: positions vector of the last decode step (dead rows pinned to 0)
+        self.last_decode_positions: Optional[np.ndarray] = None
+        # once-per-engine warning dedup (bank rebuilds / repeated runs would
+        # otherwise re-fire identical warnings)
+        self._warned_dense_fallback = False
+        self._warned_truncation = False
 
     # -- adapters ----------------------------------------------------------
     @property
@@ -260,9 +317,11 @@ class ServeEngine:
 
         raws = [raw for raw, _ in entries]
         self._serve_tree = rec(base, raws, ())
-        if kind_counts["delta"]:
+        if kind_counts["delta"] and not self._warned_dense_fallback:
             # always exact, but N·d_in·d_out fp32 per linear — make the
-            # memory cliff visible instead of silently eating it
+            # memory cliff visible instead of silently eating it (once per
+            # engine: every bank rebuild would otherwise re-fire it)
+            self._warned_dense_fallback = True
             warnings.warn(
                 f"{kind_counts['delta']} of "
                 f"{kind_counts['delta'] + kind_counts['left']} adapter banks "
@@ -298,84 +357,190 @@ class ServeEngine:
             return plen
         return min(self.max_len, ((plen + 7) // 8) * 8)
 
+    @staticmethod
+    def _resident_seq(r: Request) -> np.ndarray:
+        """Tokens whose KV is resident for an active/suspended request: the
+        prompt plus every generated token already fed back through the model
+        (the latest sampled token hasn't been — it is the next decode
+        input, preserved in ``generated`` across suspend/resume)."""
+        return np.concatenate([np.asarray(r.prompt, np.int32),
+                               np.asarray(r.generated[:-1], np.int32)])
+
     def _record_admissions(self, step: int, group, next_tokens) -> None:
-        for j, (slot, r, _pref) in enumerate(group):
+        for j, (slot, r, _pref, seq, resumed) in enumerate(group):
             others = [q.uid for i, q in enumerate(self.active)
                       if q is not None and i != slot]
             self.active[slot] = r
-            r.generated.append(int(next_tokens[j]))
-            self.positions[slot] = len(r.prompt)
+            if not resumed:
+                r.generated.append(int(next_tokens[j]))
+                if r.admit_step is None:
+                    r.admit_step = step
+            self.positions[slot] = len(seq)
             self.admission_log.append((step, slot, r.uid, others))
 
-    def _admit(self, queue: List[Request], step: int):
-        """Fill every free slot immediately.
+    def _admit(self, step: int):
+        """Fill every free slot from the scheduler.
 
-        Admission is per-slot and adapter-heterogeneous: freed slots take the
-        queue head regardless of which adapters the other slots are
-        mid-decode on.  Same-step admissions sharing a padding bucket prefill
-        as one batch (per-row ``lengths``/``adapter_ids``).  In paged mode a
-        request that doesn't fit the page pool stays queued (admission
-        retries as running slots free pages)."""
+        Admission is per-slot and adapter-heterogeneous: freed slots take
+        the scheduler's next candidate regardless of which adapters the
+        other slots are mid-decode on.  Same-step admissions sharing a
+        padding bucket prefill as one batch (per-row
+        ``lengths``/``adapter_ids``).  In paged mode a candidate that
+        doesn't fit the page pool is skipped for up to ``lookahead`` later
+        candidates (bounded out-of-order admission) and retried as running
+        slots free pages; a deadline-at-risk candidate may preempt a
+        lower-priority running slot instead of waiting."""
         free = [i for i in range(self.slots) if self.active[i] is None]
-        if not free or not queue:
+        if not free or not self.scheduler.has_work():
             return
         tree = self._banked_tree()
         if self.cache_mode == "paged":
-            self._admit_paged(tree, free, queue, step)
+            self._admit_paged(tree, free, step)
         else:
-            self._admit_dense(tree, free, queue, step)
+            self._admit_dense(tree, free, step)
 
-    def _admit_dense(self, tree, free, queue: List[Request], step: int):
-        admitted = [(slot, queue.pop(0), 0)
-                    for slot in free[:len(queue)]]
+    def _admit_dense(self, tree, free, step: int):
+        # dense slots always fit: admit straight down the policy order
+        admitted = []
+        while free and self.scheduler.has_work():
+            r, _resumed = self.scheduler.window(step)[0]
+            self.scheduler.remove(r)
+            admitted.append((free.pop(0), r, 0,
+                             np.asarray(r.prompt, np.int32), False))
         groups: Dict[int, list] = {}
-        for slot, r, pref in admitted:
-            groups.setdefault(self._bucket(len(r.prompt)), []).append(
-                (slot, r, pref))
+        for entry in admitted:
+            groups.setdefault(self._bucket(len(entry[3])), []).append(entry)
         for bucket, group in groups.items():
             toks = np.zeros((len(group), bucket), np.int32)
             lens = np.zeros((len(group),), np.int32)
             ids = np.zeros((len(group),), np.int32)
-            for j, (slot, r, _pref) in enumerate(group):
-                toks[j, :len(r.prompt)] = r.prompt
-                lens[j] = len(r.prompt)
+            for j, (slot, r, _pref, seq, _res) in enumerate(group):
+                toks[j, :len(seq)] = seq
+                lens[j] = len(seq)
                 ids[j] = self._adapter_id(r.adapter)
             logits, cache = self._prefill(
                 tree, {"tokens": jnp.asarray(toks)}, jnp.asarray(lens),
                 jnp.asarray(ids))
             rows = np.asarray(logits[:, -1, :self.cfg.vocab_size])
             nxt = [self._select_token(rows[j]) for j in range(len(group))]
-            for j, (slot, r, _pref) in enumerate(group):
+            for j, (slot, r, _pref, _seq, _res) in enumerate(group):
                 self._install_cache(slot, cache, j)
             self._record_admissions(step, group, nxt)
 
-    def _admit_paged(self, tree, free, queue: List[Request], step: int):
+    # -- preemption --------------------------------------------------------
+    def _suspend(self, slot: int, step: int) -> None:
+        """Preempt ``slot``: park its computed KV in the retained-prefix
+        pool, release its writable pages, and queue it for resumption."""
+        r = self.active[slot]
+        r._kv_pin = self.kv.suspend_slot(slot, self._resident_seq(r),
+                                         r.adapter, priority=r.priority)
+        self.active[slot] = None
+        self.positions[slot] = 0
+        r.preemptions += 1
+        self.preemption_log.append((step, slot, r.uid))
+        self.scheduler.push_resume(r)
+
+    def _eligible_victims(self, r: Request, step: int, frozen) -> List[int]:
+        """Slots suspendable so deadline-at-risk ``r`` can be admitted:
+        strictly lower priority (or equal priority with no deadline of its
+        own), ordered lowest priority first, most slack first.  ``frozen``
+        slots (admitted this same pass) are never victims."""
+        sched = self.scheduler
+        cands = []
+        for j, occ in enumerate(self.active):
+            if occ is None or j in frozen:
+                continue
+            if occ.priority < r.priority or (
+                    occ.priority == r.priority
+                    and occ.deadline_steps is None
+                    and r.deadline_steps is not None):
+                cands.append((occ.priority, -sched.slack(occ, step), j))
+        return [c[-1] for c in sorted(cands)]
+
+    def _pick_decode_victim(self, step: int) -> Optional[int]:
+        """Slot to suspend when a mid-decode KV write cannot get a page:
+        someone must yield, so every live slot is eligible — lowest
+        priority, then most deadline slack, then most recently admitted
+        (LIFO preserves the oldest invested work)."""
+        sched = self.scheduler
+        cands = [(occ.priority, -sched.slack(occ, step),
+                  -(occ.admit_step or 0), j)
+                 for j, occ in enumerate(self.active) if occ is not None]
+        return min(cands)[-1] if cands else None
+
+    def _try_admit_pages(self, free: List[int], r: Request, resumed: bool,
+                         step: int, frozen) -> Optional[Tuple[int,
+                                                              np.ndarray]]:
+        """Allocate slot ``free[0]``'s pages for ``r``; returns (aliased
+        prefix length, resident token sequence) or None when the pages
+        don't fit.  Under the preempting policy, a deadline-at-risk ``r``
+        suspends victims (their slots join ``free``) until it fits or no
+        eligible victim remains; reservation is then also prompt-only —
+        decode grows pages on demand via ``ensure_position`` instead of
+        reserving the worst case up front."""
         kv = self.kv
-        admitted = []
-        while free and queue:
-            r = queue[0]
-            prompt = np.asarray(r.prompt, np.int32)
-            # reserve the worst-case footprint so a mid-decode page-boundary
-            # crossing can never hit an empty pool (decode stops one short
-            # of max_len, so max_len tokens always suffice)
-            reserve = min(len(prompt) + r.max_new_tokens, self.max_len)
+        seq = self._resident_seq(r) if resumed \
+            else np.asarray(r.prompt, np.int32)
+        reserve = None if self.scheduler.preempt \
+            else min(len(r.prompt) + r.max_new_tokens, self.max_len)
+        while True:
             try:
-                prefix = kv.admit(free[0], prompt, r.adapter,
-                                  reserve_tokens=reserve)
+                if resumed:
+                    prefix = kv.resume_slot(
+                        free[0], seq, r.adapter, reserve_tokens=reserve,
+                        pin=getattr(r, "_kv_pin", None))
+                    r._kv_pin = None
+                else:
+                    prefix = kv.admit(free[0], seq, r.adapter,
+                                      reserve_tokens=reserve)
+                return prefix, seq
             except OutOfPages:
-                break              # retry after running slots free pages
-            admitted.append((free.pop(0), queue.pop(0), prefix))
-        if not admitted and not any(r is not None for r in self.active):
-            raise OutOfPages(
-                f"request {queue[0].uid} (prompt {len(queue[0].prompt)} "
-                f"tokens) cannot fit an idle page pool of "
-                f"{kv.num_pages - 1} pages x {kv.page_size}")
-        # group by SUFFIX bucket: rows aliasing a resident prefix prefill
-        # only their remaining tokens
+                if not (self.scheduler.preempt
+                        and self.scheduler.at_risk(r, step)):
+                    return None
+                victims = self._eligible_victims(r, step, frozen)
+                if not victims:
+                    return None
+                # suspend only when preemption can actually cover the
+                # shortfall — an infeasible candidate must not thrash
+                # suspend/re-prefill/resume cycles on its victims for
+                # nothing (victims' shared pages free no capacity)
+                need = -(-(len(seq) if reserve is None else reserve)
+                         // kv.page_size) - kv.alias_probe(seq, r.adapter)
+                gain = sum(kv.exclusive_pages(j) for j in victims)
+                if kv.allocatable_pages() + gain < need:
+                    return None
+                self._suspend(victims[0], step)
+                free.append(victims[0])
+
+    def _admit_paged(self, tree, free, step: int):
+        kv = self.kv
+        admitted = []          # (slot, request, prefix, seq, resumed)
+        frozen = set()         # slots filled this pass: not preemptible
+        while free and self.scheduler.has_work():
+            pick = None
+            for r, resumed in self.scheduler.window(step):
+                res = self._try_admit_pages(free, r, resumed, step, frozen)
+                if res is not None:
+                    pick = (r, resumed) + res
+                    break
+            if pick is None:
+                break          # retry after running slots free pages
+            r, resumed, prefix, seq = pick
+            self.scheduler.remove(r)
+            slot = free.pop(0)
+            frozen.add(slot)
+            admitted.append((slot, r, prefix, seq, resumed))
+        if not admitted:
+            return
+        # group by SUFFIX bucket: rows aliasing a resident prefix (shared
+        # pages or a resumed request's retained KV) prefill only their
+        # remaining tokens
         groups: Dict[int, list] = {}
-        for slot, r, prefix in admitted:
-            groups.setdefault(self._bucket(len(r.prompt) - prefix),
-                              []).append((slot, r, prefix))
+        for entry in admitted:
+            _slot, _r, prefix, seq, _res = entry
+            groups.setdefault(self._bucket(len(seq) - prefix),
+                              []).append(entry)
         for bucket, group in groups.items():
             g = len(group)
             toks = np.zeros((g, bucket), np.int32)
@@ -383,8 +548,8 @@ class ServeEngine:
             prefs = np.zeros((g,), np.int32)
             ids = np.zeros((g,), np.int32)
             rows_pt = np.zeros((g, kv.pages_per_slot), np.int32)
-            for j, (slot, r, prefix) in enumerate(group):
-                suffix = np.asarray(r.prompt, np.int32)[prefix:]
+            for j, (slot, r, prefix, seq, _res) in enumerate(group):
+                suffix = seq[prefix:]
                 toks[j, :len(suffix)] = suffix
                 lens[j] = len(suffix)
                 prefs[j] = prefix
@@ -402,10 +567,12 @@ class ServeEngine:
                 jnp.asarray(lens), jnp.asarray(prefs), jnp.asarray(ids))
             kv.pools = new_pools
             rows = np.asarray(logits[:, -1, :self.cfg.vocab_size])
-            nxt = [self._select_token(rows[j]) for j in range(g)]
-            for slot, r, _pref in group:
-                kv.commit_prompt(slot, np.asarray(r.prompt, np.int32),
-                                 r.adapter)
+            # a resumed request's next token was sampled before suspension:
+            # the tail-rebuild logits are discarded, no RNG draw happens
+            nxt = [None if group[j][4] else self._select_token(rows[j])
+                   for j in range(g)]
+            for slot, r, _pref, seq, _res in group:
+                kv.commit_prompt(slot, seq, r.adapter)
             self._record_admissions(step, group, nxt)
 
     def _install_cache(self, slot: int, cache, j: int):
@@ -424,109 +591,251 @@ class ServeEngine:
                 if full.ndim > 1 else full, self.cache, sliced)
 
     # -- main loop ----------------------------------------------------------
-    def _decode_live(self, tree, live: List[int]):
-        """One decode step over every live slot; returns last-pos logits."""
+    def _ensure_decode_pages(self, live: List[int], step: int) -> List[int]:
+        """Guarantee every live slot owns the page this step's KV write
+        lands in.  Under the preempting policy, pool pressure suspends the
+        lowest-priority live slot (possibly the needy one itself) instead of
+        faulting; the surviving live list is returned."""
+        survivors: List[int] = []
+        for i in live:
+            while self.active[i] is not None:
+                try:
+                    self.kv.ensure_position(i, int(self.positions[i]))
+                    survivors.append(i)
+                    break
+                except OutOfPages:
+                    if not self.scheduler.preempt:
+                        raise
+                    victim = self._pick_decode_victim(step)
+                    if victim is None:
+                        raise
+                    self._suspend(victim, step)
+        return [i for i in survivors if self.active[i] is not None]
+
+    def _decode_live(self, tree, live: List[int], step: int):
+        """One decode step over every live slot; returns (last-pos logits,
+        surviving live slots — pool pressure may suspend some)."""
+        if self.cache_mode == "paged":
+            live = self._ensure_decode_pages(live, step)
+            if not live:
+                return None, live
         toks = np.zeros((self.slots, 1), np.int32)
         ids = np.zeros((self.slots,), np.int32)
+        positions = np.zeros((self.slots,), np.int32)
         for i in live:
             toks[i, 0] = self.active[i].generated[-1]
             ids[i] = self._adapter_id(self.active[i].adapter)
+            positions[i] = self.positions[i]
+        # dead rows decode as ghosts (token 0, adapter 0): their positions
+        # are pinned to 0 above, and in paged mode their table rows must be
+        # all-trash — so a future table bug corrupts loudly here instead of
+        # silently absorbing ghost KV writes into a live page
         if self.cache_mode == "paged":
-            for i in live:   # page for this step's KV write
-                self.kv.ensure_position(i, int(self.positions[i]))
+            for i in range(self.slots):
+                if self.active[i] is None:
+                    assert (self.kv.tables[i] == TRASH_PAGE).all(), (
+                        f"dead slot {i} still maps pages "
+                        f"{self.kv.tables[i].tolist()} — its ghost decode "
+                        f"write would corrupt live KV")
+        self.last_decode_positions = positions.copy()
+        if self.cache_mode == "paged":
             cache = {"k": self.kv.pools["k"], "v": self.kv.pools["v"],
                      "page_table": self.kv.table_jax()}
             logits, new_cache = self._decode(
                 tree, {"tokens": jnp.asarray(toks)}, cache,
-                jnp.asarray(self.positions), jnp.asarray(ids))
+                jnp.asarray(positions), jnp.asarray(ids))
             self.kv.pools = {"k": new_cache["k"], "v": new_cache["v"]}
         else:
             logits, self.cache = self._decode(
                 tree, {"tokens": jnp.asarray(toks)}, self.cache,
-                jnp.asarray(self.positions), jnp.asarray(ids))
-        return np.asarray(logits[:, -1, :self.cfg.vocab_size])
+                jnp.asarray(positions), jnp.asarray(ids))
+        return np.asarray(logits[:, -1, :self.cfg.vocab_size]), live
 
-    def _finish_slot(self, slot: int, finished: List[Request]):
-        self.active[slot].done = True
-        finished.append(self.active[slot])
+    def _finish_slot(self, slot: int, finished: List[Request], step: int):
+        r = self.active[slot]
+        r.done = True
+        r.finish_step = step
+        finished.append(r)
         self.active[slot] = None
+        self.positions[slot] = 0
         if self.cache_mode == "paged":
             self.kv.free_slot(slot)
 
+    # -- request intake ----------------------------------------------------
+    def _validate(self, r: Request) -> None:
+        self._adapter_params(r.adapter)  # fail fast on unknown adapters
+        if not 0 < len(r.prompt) < self.max_len:
+            raise ValueError(
+                f"request {r.uid}: prompt length {len(r.prompt)} must be "
+                f"in [1, max_len) = [1, {self.max_len}) — the slot needs "
+                f"at least one free cache position to decode into")
+        if self.cache_mode == "paged":
+            # fail fast on requests that can never fit: an idle pool can
+            # always reclaim every retained page, so num_pages - 1 is
+            # the hard ceiling (an infeasible FIFO head would otherwise
+            # starve the queue behind it forever)
+            reserve = min(len(r.prompt) + r.max_new_tokens, self.max_len)
+            need = -(-reserve // self.kv.page_size)
+            if need > self.kv.num_pages - 1:
+                raise ValueError(
+                    f"request {r.uid}: worst-case footprint of {need} "
+                    f"pages exceeds the pool ({self.kv.num_pages - 1} "
+                    f"non-trash pages of {self.kv.page_size}) — grow "
+                    f"num_pages or shrink max_new_tokens")
+
+    def submit(self, request: Request, arrival_step: Optional[int] = None,
+               _validated: bool = False) -> None:
+        """Enqueue one request for streaming admission (callable before or
+        during :meth:`run_stream`; arrival is stamped at the current engine
+        step unless ``arrival_step`` overrides it).
+
+        A finished/truncated ``Request`` object submitted again is RESET
+        (``generated``/``done``/``truncated`` cleared): re-serving used to
+        silently append new tokens to the stale output and keep stale
+        completion flags."""
+        if not _validated:
+            self._validate(request)
+        if request.generated or request.done or request.truncated:
+            request.generated = []
+            request.done = False
+            request.truncated = False
+        request.admit_step = None
+        request.finish_step = None
+        request.preemptions = 0
+        request.arrival_step = (self._step if arrival_step is None
+                                else arrival_step)
+        self.scheduler.push(request)
+
+    # -- serving -----------------------------------------------------------
     def run(self, requests: List[Request], max_steps: int = 512,
             ) -> List[Request]:
-        """Serve ``requests`` to completion (or ``max_steps``).
+        """Serve a static batch of ``requests`` to completion (or
+        ``max_steps``).
+
+        A thin wrapper over :meth:`run_stream`: every request arrives at
+        step 0, admission is strict FIFO (no lookahead) with worst-case page
+        reservation and no preemption — token-identical to the historical
+        static-queue engine.
 
         EVERY request comes back: finished ones with ``done=True``, and — if
         the step budget ran out — still-active and still-queued ones with
         ``done=False, truncated=True`` (partial ``generated`` preserved, a
         warning emitted, ``last_run_truncated`` set).  Truncated slots are
         drained and their pages freed, so the engine is reusable."""
-        queue = list(requests)
-        for r in queue:
-            self._adapter_params(r.adapter)  # fail fast on unknown adapters
-            if not 0 < len(r.prompt) < self.max_len:
-                raise ValueError(
-                    f"request {r.uid}: prompt length {len(r.prompt)} must be "
-                    f"in [1, max_len) = [1, {self.max_len}) — the slot needs "
-                    f"at least one free cache position to decode into")
-            if self.cache_mode == "paged":
-                # fail fast on requests that can never fit: an idle pool can
-                # always reclaim every retained page, so num_pages - 1 is
-                # the hard ceiling (an infeasible FIFO head would otherwise
-                # starve the queue behind it forever)
-                reserve = min(len(r.prompt) + r.max_new_tokens, self.max_len)
-                need = -(-reserve // self.kv.page_size)
-                if need > self.kv.num_pages - 1:
-                    raise ValueError(
-                        f"request {r.uid}: worst-case footprint of {need} "
-                        f"pages exceeds the pool ({self.kv.num_pages - 1} "
-                        f"non-trash pages of {self.kv.page_size}) — grow "
-                        f"num_pages or shrink max_new_tokens")
+        for r in requests:
+            self._validate(r)          # all-or-nothing before any enqueue
+        for r in requests:
+            self.submit(r, arrival_step=0, _validated=True)
+        return self.run_stream(max_steps=max_steps, lookahead=0,
+                               preempt=False)
+
+    def run_stream(self,
+                   arrivals: Optional[Iterable[Tuple[int, Request]]] = None,
+                   max_steps: int = 512, lookahead: int = 4,
+                   preempt: bool = True) -> List[Request]:
+        """Streaming serve: admit requests as they arrive instead of taking
+        the whole workload up front.
+
+        ``arrivals`` is an optional trace of ``(step, request)`` pairs, each
+        injected once the engine reaches that step (on top of anything
+        already :meth:`submit`-ed, mid-run submissions included).
+        ``lookahead`` bounds out-of-order admission past a head that doesn't
+        fit; ``preempt`` enables SLO-aware suspension of lower-priority
+        slots (paged mode only) — with it, admission reserves only prompt
+        pages and decode grows pages on demand, so pool capacity follows
+        *live* tokens rather than worst-case footprints.  See
+        :mod:`repro.serve.scheduler` for the policy.
+
+        Returns every request served this run (same completion/truncation
+        contract as :meth:`run`)."""
+        preempt = preempt and self.cache_mode == "paged"
+        self.scheduler.configure(lookahead, preempt)
+        trace = sorted(arrivals, key=lambda a: a[0]) if arrivals else []
+        for _, r in trace:
+            self._validate(r)
         tree = self._banked_tree()
         finished: List[Request] = []
         steps = 0
         max_live = 0
-        while (queue or any(r is not None for r in self.active)) \
+        next_arrival = 0
+        preempted_before = len(self.preemption_log)
+        while (next_arrival < len(trace) or self.scheduler.has_work()
+                or any(r is not None for r in self.active)) \
                 and steps < max_steps:
             steps += 1
-            self._admit(queue, steps)
+            self._step = steps
+            while (next_arrival < len(trace)
+                    and trace[next_arrival][0] <= steps):
+                s, r = trace[next_arrival]
+                self.submit(r, arrival_step=s, _validated=True)
+                next_arrival += 1
+            self._admit(steps)
             live = [i for i, r in enumerate(self.active) if r is not None]
             max_live = max(max_live, len(live))
             if not live:
+                if (self.cache_mode == "paged" and self.scheduler.has_work()
+                        and next_arrival >= len(trace)):
+                    head = self.scheduler.window(steps)[0][0]
+                    raise OutOfPages(
+                        f"request {head.uid} (prompt {len(head.prompt)} "
+                        f"tokens) cannot fit an idle page pool of "
+                        f"{self.kv.num_pages - 1} pages x "
+                        f"{self.kv.page_size} "
+                        f"({self.kv.pages_resident()} resident, "
+                        f"{self.kv.pages_resident() - self.kv.pages_in_use()}"
+                        f" retained)")
                 continue
-            rows = self._decode_live(tree, live)
+            rows, live = self._decode_live(tree, live, steps)
             for i in live:
                 r = self.active[i]
                 r.generated.append(self._select_token(rows[i]))
                 self.positions[i] += 1
                 if (len(r.generated) >= r.max_new_tokens
                         or self.positions[i] >= self.max_len - 1):
-                    self._finish_slot(i, finished)
-        #: engine iterations the last run() took — the deterministic
+                    self._finish_slot(i, finished, steps)
+        #: engine iterations the last run took — the deterministic
         #: wave-serialization metric (a wave engine pays ~one full
         #: prefill+decode pass per adapter switch; per-slot batching doesn't)
         self.last_run_steps = steps
         #: peak concurrently-live slots (capacity metric for bench_paged_kv)
         self.last_run_max_live = max_live
+        #: suspensions this run (SLO-aware preemption observability)
+        self.last_run_preemptions = \
+            len(self.preemption_log) - preempted_before
         self.last_run_truncated = bool(
-            queue or any(r is not None for r in self.active))
+            next_arrival < len(trace) or self.scheduler.has_work()
+            or any(r is not None for r in self.active))
         if self.last_run_truncated:
             n_active = sum(r is not None for r in self.active)
-            warnings.warn(
-                f"run() hit max_steps={max_steps} with {n_active} active and "
-                f"{len(queue)} queued requests; returning them as partials "
-                f"(done=False, truncated=True)")
+            n_queued = len(self.scheduler) + len(trace) - next_arrival
+            if not self._warned_truncation:
+                # once per engine: repeated truncated runs used to re-emit
+                # an identical warning every time
+                self._warned_truncation = True
+                warnings.warn(
+                    f"run hit max_steps={max_steps} with {n_active} active "
+                    f"and {n_queued} queued requests; returning them as "
+                    f"partials (done=False, truncated=True)")
             for i, r in enumerate(self.active):
                 if r is None:
                     continue
                 r.truncated = True
                 finished.append(r)
                 self.active[i] = None
+                self.positions[i] = 0
                 if self.cache_mode == "paged":
                     self.kv.free_slot(i)
-            for r in queue:
+            for r in self.scheduler.drain():
+                r.truncated = True
+                pin = getattr(r, "_kv_pin", None)
+                if pin is not None:
+                    # abandoned suspension: demote its retained pages to
+                    # ordinary residency instead of pinning them forever
+                    self.kv.release_pin(pin)
+                    r._kv_pin = None
+                finished.append(r)
+            for _, r in trace[next_arrival:]:
                 r.truncated = True
                 finished.append(r)
-            queue.clear()
+        self._step = 0
         return finished

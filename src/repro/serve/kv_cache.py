@@ -30,19 +30,36 @@ is the allocator:
   allocated, never an alias; the capped boundary page is recomputed into the
   slot's own copy rather than mutating the shared resident one.
 * **retention** — with ``retain_prefix_cache`` (default), registered pages
-  whose refcount drops to 0 stay resident in an LRU pool and are evicted
-  only when the free list runs dry, so sequential same-prefix traffic hits
-  too, not just concurrent traffic.
+  whose refcount drops to 0 stay resident and are evicted only when the
+  free list runs dry.  Eviction is priority-aware: each outstanding
+  suspension (:meth:`PagedKVCache.suspend_slot`) pins its pages at the
+  request's priority, and retained pages evict lowest-pin-priority first —
+  a suspended high-priority request's KV outlives ordinary retained
+  prefixes, so its resume re-prefills less.  Within a priority level the
+  TAIL of a suspended chain evicts before its head (evicting the head
+  would strand every later page: resume's prefix aliasing walks the
+  cumulative hash chain from token 0); remaining ties break LRU.  Pins
+  are per-suspension tokens — a page shared by several suspended
+  sequences stays privileged until the last dependent resumes or is
+  abandoned (:meth:`release_pin`).
+* **suspend / resume** — preemption support.  ``suspend_slot`` releases a
+  slot's writable pages while registering every *full* page of its
+  prompt+generated sequence in the retained pool (under the same cumulative
+  hashes prefix sharing uses); ``resume_slot`` is an ``admit`` of the full
+  sequence, so a resumed request re-aliases everything still resident and
+  re-prefills only the evicted tail (at most the partial last page plus the
+  copy-on-extend boundary page, when nothing was evicted in between).
 
 Allocation failure raises :class:`OutOfPages`; the engine responds by
-deferring admission until running slots free pages (preemption is the
-follow-up, see ROADMAP).
+deferring admission until running slots free pages, or — under the
+streaming scheduler — by suspending a lower-priority slot
+(:mod:`repro.serve.scheduler`).
 """
 from __future__ import annotations
 
 import hashlib
 from collections import OrderedDict
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -90,9 +107,15 @@ class PagedKVCache:
         self._page_to_hash: Dict[int, str] = {}
         #: refcount-0 registered pages kept resident, LRU order
         self._reusable: "OrderedDict[int, None]" = OrderedDict()
+        #: eviction pins, one per outstanding suspension: token ->
+        #: (priority, {page id -> position in the suspended chain}).  A page
+        #: may appear in several pins (shared prefixes); it keeps its
+        #: privilege until the LAST dependent suspension resolves
+        self._pins: Dict[int, Tuple[int, Dict[int, int]]] = {}
+        self._next_pin = 0
         self.stats = {"prefix_queries": 0, "prefix_hits": 0,
                       "pages_aliased": 0, "pages_allocated": 0,
-                      "evictions": 0}
+                      "evictions": 0, "suspends": 0, "resumes": 0}
 
     # -- hashing -----------------------------------------------------------
     def _page_hashes(self, prompt: np.ndarray, adapter_key: str) -> List[str]:
@@ -108,11 +131,37 @@ class PagedKVCache:
         return out
 
     # -- allocation --------------------------------------------------------
+    def _evict_key(self, q: int) -> Tuple[int, int]:
+        """Eviction order for retained page ``q``: lowest pin priority
+        first (suspended high-priority sequences stay resident longest),
+        and within a priority level tail-of-chain first — evicting a
+        chain's HEAD would make every later page unreachable by the
+        resume's prefix aliasing while still occupying the pool.  Unpinned
+        pages are (0, 0); ``min`` over the insertion-ordered dict breaks
+        remaining ties LRU."""
+        level, pos = 0, None
+        for prio, pages in self._pins.values():
+            i = pages.get(q)
+            if i is None:
+                continue
+            level = max(level, prio)
+            pos = i if pos is None else min(pos, i)
+        return (level, -(pos or 0))
+
+    def _unpin_page(self, p: int) -> None:
+        """Drop ``p`` from every pin: its CONTENT died (evicted or freed
+        unretained), so the page id no longer stands for the suspended
+        sequence's KV."""
+        for _prio, pages in self._pins.values():
+            pages.pop(p, None)
+
     def _alloc(self) -> int:
         if self._free:
             p = self._free.pop()
         elif self._reusable:
-            p, _ = self._reusable.popitem(last=False)   # LRU evict
+            p = min(self._reusable, key=self._evict_key)
+            self._reusable.pop(p)
+            self._unpin_page(p)
             h = self._page_to_hash.pop(p, None)
             if h is not None:
                 self._hash_to_page.pop(h, None)
@@ -120,7 +169,8 @@ class PagedKVCache:
         else:
             raise OutOfPages(
                 f"all {self.num_pages - 1} KV pages referenced "
-                f"({self.pages_in_use()} live)")
+                f"({self.pages_in_use()} live, "
+                f"{self.pages_resident()} resident, 0 retained)")
         self.refcount[p] = 1
         self.stats["pages_allocated"] += 1
         return p
@@ -141,6 +191,7 @@ class PagedKVCache:
             if h is not None:
                 self._page_to_hash.pop(p)
                 self._hash_to_page.pop(h, None)
+            self._unpin_page(p)
             self._free.append(p)
 
     # -- slot lifecycle ----------------------------------------------------
@@ -150,10 +201,11 @@ class PagedKVCache:
         shared-prefix page, allocate fresh pages for the rest.
 
         ``reserve_tokens`` (default: the prompt length) is the request's
-        worst-case footprint — pages covering it are allocated up front so a
-        mid-decode page-boundary crossing can never hit an empty pool (the
-        engine reserves ``min(len + max_new, max_len)``; relaxing this to
-        on-demand growth is what preemption will buy).
+        reserved footprint — pages covering it are allocated up front.  The
+        FIFO engine reserves the worst case ``min(len + max_new, max_len)``
+        so a mid-decode page-boundary crossing can never hit an empty pool;
+        the preempting streaming engine reserves only the prompt and grows
+        via :meth:`ensure_position`, suspending a slot on pool pressure.
 
         Returns the aliased prefix length in TOKENS (a page multiple, capped
         so >= 1 suffix token remains to prefill).  Raises :class:`OutOfPages`
@@ -194,7 +246,9 @@ class PagedKVCache:
             raise OutOfPages(
                 f"{n_fresh} pages needed, "
                 f"{len(self._free) + len(self._reusable)} allocatable "
-                f"({self.pages_in_use()} of {self.num_pages - 1} referenced)")
+                f"({self.pages_in_use()} of {self.num_pages - 1} referenced, "
+                f"{self.pages_resident()} resident, "
+                f"{len(self._reusable)} retained)")
         fresh = [self._alloc() for _ in range(n_fresh)]
         if shared:
             self.stats["prefix_hits"] += 1
@@ -207,22 +261,33 @@ class PagedKVCache:
         self._owned[slot] = list(row)
         return len(shared) * self.page_size
 
+    def _register_pages(self, slot: int, tokens: np.ndarray,
+                        adapter_key: str) -> List[int]:
+        """Register ``slot``'s pages fully covered by ``tokens`` under their
+        cumulative content hashes; returns the page ids covered (registered
+        now or earlier)."""
+        covered = []
+        for i, h in enumerate(self._page_hashes(tokens, adapter_key)):
+            p = int(self.tables[slot, i])
+            covered.append(p)
+            if h in self._hash_to_page or p in self._page_to_hash:
+                continue                  # already registered (e.g. aliased)
+            self._hash_to_page[h] = p
+            self._page_to_hash[p] = h
+        return covered
+
     def commit_prompt(self, slot: int, prompt: np.ndarray,
                       adapter_key: str) -> None:
         """Register ``slot``'s fully-prompt-covered pages for later sharing.
         Call AFTER the prefill that filled them has run — a registered page
         must be complete before another slot may alias it."""
-        for i, h in enumerate(self._page_hashes(prompt, adapter_key)):
-            p = int(self.tables[slot, i])
-            if h in self._hash_to_page or p in self._page_to_hash:
-                continue                  # already registered (e.g. aliased)
-            self._hash_to_page[h] = p
-            self._page_to_hash[p] = h
+        self._register_pages(slot, prompt, adapter_key)
 
     def ensure_position(self, slot: int, pos: int) -> None:
         """Allocate pages so ``slot`` can write KV at position ``pos``.
-        A no-op when admission reserved the full footprint; the safety net
-        for callers that admit with prompt-only reservations."""
+        A no-op when admission reserved the full footprint; the growth path
+        for the preempting engine's prompt-only reservations (its
+        :class:`OutOfPages` is what triggers decode-time suspension)."""
         idx = pos // self.page_size
         if idx >= self.pages_per_slot:
             raise OutOfPages(
@@ -240,6 +305,76 @@ class PagedKVCache:
         self._owned[slot] = []
         self.n_pages[slot] = 0
         self.tables[slot, :] = TRASH_PAGE
+
+    # -- preemption --------------------------------------------------------
+    def suspend_slot(self, slot: int, tokens: np.ndarray, adapter_key: str,
+                     priority: int = 0) -> int:
+        """Preempt ``slot``: release its writable pages while keeping its
+        computed KV recoverable.  Returns a pin token for
+        :meth:`resume_slot` / :meth:`release_pin`.
+
+        ``tokens`` is the slot's full resident sequence (prompt + generated
+        so far).  Every page *fully covered* by it is registered in the
+        prefix pool under the same cumulative hashes prefix sharing uses —
+        with ``retain_prefix_cache`` those pages stay resident (refcount 0,
+        evictable under pressure, pinned at ``priority`` in the eviction
+        order for as long as the pin is outstanding) so resume re-aliases
+        them for free.  The partial tail page returns to the free list; its
+        positions are what resume re-prefills.  Without retention
+        everything is released and resume re-prefills the whole sequence
+        (correct, just slower)."""
+        assert self.n_pages[slot] > 0, f"slot {slot} has nothing to suspend"
+        covered = self._register_pages(slot, tokens, adapter_key)
+        token = self._next_pin
+        self._next_pin += 1
+        self._pins[token] = (priority, {p: i for i, p in enumerate(covered)})
+        self.stats["suspends"] += 1
+        self.free_slot(slot)
+        return token
+
+    def resume_slot(self, slot: int, tokens: np.ndarray, adapter_key: str,
+                    reserve_tokens: int = None,
+                    pin: Optional[int] = None) -> int:
+        """Rebuild a suspended slot's page table for its full sequence: an
+        :meth:`admit` of ``tokens`` (so every still-resident page is
+        re-aliased) that also releases the suspension's eviction pin — the
+        retention insurance has paid out; pages shared with OTHER
+        still-outstanding suspensions keep their pins.  Returns the aliased
+        length in tokens; the caller re-prefills only ``tokens[aliased:]``
+        (the evicted tail).  On failure (:class:`OutOfPages`) the pin stays
+        outstanding."""
+        prefix = self.admit(slot, tokens, adapter_key,
+                            reserve_tokens=reserve_tokens)
+        if pin is not None:
+            self.release_pin(pin)
+        self.stats["resumes"] += 1
+        return prefix
+
+    def release_pin(self, pin: int) -> None:
+        """Drop a suspension's eviction pin without resuming it (the
+        request was truncated or abandoned); its retained pages demote to
+        ordinary prefix-cache residency."""
+        self._pins.pop(pin, None)
+
+    def alias_probe(self, tokens: np.ndarray, adapter_key: str) -> int:
+        """Full pages of ``tokens`` an :meth:`admit` would alias right now
+        (read-only hash-chain walk; no state change)."""
+        hashes = self._page_hashes(tokens, adapter_key)
+        n = 0
+        for i in range(min(len(hashes), (len(tokens) - 1) // self.page_size)):
+            if hashes[i] not in self._hash_to_page:
+                break
+            n += 1
+        return n
+
+    def exclusive_pages(self, slot: int) -> int:
+        """Pages only ``slot`` references — what suspending it would return
+        to the allocatable (free + retained) pool."""
+        return sum(1 for p in self._owned[slot] if self.refcount[p] == 1)
+
+    def allocatable_pages(self) -> int:
+        """Pages an admit could draw on right now (free + evictable)."""
+        return len(self._free) + len(self._reusable)
 
     # -- views / accounting ------------------------------------------------
     def table_jax(self) -> jnp.ndarray:

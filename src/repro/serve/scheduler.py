@@ -1,0 +1,130 @@
+"""Streaming admission scheduler: arrival-stamped request queue with
+priority/deadline ordering, bounded out-of-order lookahead, and a resume
+lane for preempted requests.
+
+The scheduler is pure host-side policy — it never touches pages or device
+state.  The engine asks it *which* request to try next
+(:meth:`StreamScheduler.window`); the engine owns the page allocator and
+reports back by removing admitted requests and pushing preempted ones onto
+the resume lane.
+
+**Ordering.**  Candidates are ranked by ``(-priority, deadline slack,
+resumed-first, submission order)``:
+
+* higher ``Request.priority`` first;
+* among equal priorities, smaller *slack* first — slack is the number of
+  engine steps a request can still afford to wait and finish inside its
+  ``deadline_steps`` SLO (requests without a deadline have infinite slack);
+* preempted requests outrank fresh arrivals at equal priority/slack (their
+  prefill work is already invested and mostly resident);
+* FIFO submission order breaks all remaining ties, so with uniform
+  priorities and no deadlines the policy degenerates to exact FIFO.
+
+**Bounded lookahead.**  Only the resume lane plus the first ``1 +
+lookahead`` pending requests are candidates.  A request that cannot be
+admitted (its pages don't fit) no longer blocks everything behind it — the
+engine tries the next candidate in the window — but nothing *outside* the
+window can overtake it, which bounds how long a large head can starve.
+``lookahead=0`` restores strict FIFO head-of-line semantics (what
+``ServeEngine.run`` uses, keeping it token-identical to the historical
+static-queue engine).
+
+**Deadline risk.**  :meth:`at_risk` flags requests whose slack has dropped
+to ``risk_margin`` steps or fewer; the engine only preempts running slots
+on behalf of at-risk candidates (see ``docs/serving.md``).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Tuple, TYPE_CHECKING
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.serve.engine import Request
+
+
+class StreamScheduler:
+    """Admission policy for :meth:`repro.serve.engine.ServeEngine.run_stream`.
+
+    ``lookahead``: how many pending requests beyond the head may be tried
+    when the head doesn't fit (0 = strict FIFO).  ``preempt``: whether the
+    engine may suspend running slots for deadline-at-risk candidates.
+    ``risk_margin``: slack (in engine steps) at or below which a deadlined
+    request counts as at risk.
+    """
+
+    def __init__(self, lookahead: int = 4, preempt: bool = True,
+                 risk_margin: int = 2):
+        self.configure(lookahead, preempt, risk_margin)
+        self._pending: List["Request"] = []    # submission order
+        self._resume: List["Request"] = []     # suspension order
+        self._stamp = 0                        # total submission counter
+
+    def configure(self, lookahead: int, preempt: bool,
+                  risk_margin: Optional[int] = None) -> None:
+        if lookahead < 0:
+            raise ValueError(f"lookahead must be >= 0, got {lookahead}")
+        self.lookahead = int(lookahead)
+        self.preempt = bool(preempt)
+        if risk_margin is not None:
+            self.risk_margin = int(risk_margin)
+
+    # -- queue state -------------------------------------------------------
+    def push(self, request: "Request") -> None:
+        """Enqueue a fresh arrival (stamped with submission order)."""
+        request._sched_stamp = self._stamp
+        self._stamp += 1
+        self._pending.append(request)
+
+    def push_resume(self, request: "Request") -> None:
+        """Enqueue a preempted request for resumption."""
+        self._resume.append(request)
+
+    def remove(self, request: "Request") -> None:
+        """Drop an admitted request from whichever lane holds it."""
+        for lane in (self._resume, self._pending):
+            for i, r in enumerate(lane):
+                if r is request:
+                    del lane[i]
+                    return
+        raise ValueError(f"request {request.uid} not queued")
+
+    def has_work(self) -> bool:
+        return bool(self._pending or self._resume)
+
+    def __len__(self) -> int:
+        return len(self._pending) + len(self._resume)
+
+    def drain(self) -> List["Request"]:
+        """Remove and return everything still queued (truncation path);
+        resume-lane requests first (they hold partial output)."""
+        out = self._resume + self._pending
+        self._resume, self._pending = [], []
+        return out
+
+    # -- policy ------------------------------------------------------------
+    def slack(self, request: "Request", step: int) -> float:
+        """Engine steps this request can still wait and make its deadline:
+        ``(arrival + deadline) - step - remaining_work``.  Remaining work is
+        one step per token left to generate (prefill rides the admission
+        step).  Infinite for requests without a deadline."""
+        if request.deadline_steps is None:
+            return math.inf
+        remaining = max(request.max_new_tokens - len(request.generated), 0)
+        return (request.arrival_step + request.deadline_steps) \
+            - step - remaining
+
+    def at_risk(self, request: "Request", step: int) -> bool:
+        return self.slack(request, step) <= self.risk_margin
+
+    def _key(self, request: "Request", step: int, resumed: bool):
+        return (-request.priority, self.slack(request, step),
+                0 if resumed else 1, request._sched_stamp)
+
+    def window(self, step: int) -> List[Tuple["Request", bool]]:
+        """Policy-ordered admission candidates: the whole resume lane plus
+        the first ``1 + lookahead`` pending requests, as ``(request,
+        resumed)`` pairs."""
+        cands = [(r, True) for r in self._resume]
+        cands += [(r, False) for r in self._pending[:1 + self.lookahead]]
+        cands.sort(key=lambda c: self._key(c[0], step, c[1]))
+        return cands

@@ -188,3 +188,67 @@ def test_engine_greedy_deterministic(setup):
         done = eng.run([Request(uid=0, prompt=prompt, max_new_tokens=4)])
         outs.append(tuple(done[0].generated))
     assert outs[0] == outs[1]
+
+
+def _mixed_spec(cfg, n=6):
+    rng = np.random.default_rng(23)
+    adapters = ["base", "tuned_a", "tuned_b"]
+    return [(u, adapters[u % 3],
+             rng.integers(0, cfg.vocab_size, size=3 + u * 2, dtype=np.int32),
+             3 + (u % 3) * 3) for u in range(n)]
+
+
+def _build(spec):
+    return [Request(uid=u, adapter=a, prompt=p.copy(), max_new_tokens=m)
+            for u, a, p, m in spec]
+
+
+def test_run_is_run_stream_with_step0_arrivals(setup):
+    """The acceptance pin: run() is a thin wrapper over run_stream() with
+    every arrival at step 0, strict FIFO, no preemption — token- AND
+    schedule-identical on a mixed-adapter workload with mid-decode
+    refills."""
+    cfg, params = setup
+    spec = _mixed_spec(cfg)
+    static = _engine_with_adapters(params, cfg, slots=2)
+    got = static.run(_build(spec), max_steps=128)
+    assert len(got) == 6 and all(r.done for r in got)
+
+    streamed = _engine_with_adapters(params, cfg, slots=2)
+    trace = [(0, r) for r in _build(spec)]
+    got_s = streamed.run_stream(trace, max_steps=128, lookahead=0,
+                                preempt=False)
+    assert {r.uid: r.generated for r in got} == \
+        {r.uid: r.generated for r in got_s}
+    assert static.last_run_steps == streamed.last_run_steps
+    assert static.last_run_preemptions == streamed.last_run_preemptions == 0
+
+
+def test_request_reuse_resets_state_regression(setup):
+    """Re-serving the SAME Request objects used to silently append to the
+    stale ``generated`` list and keep stale ``done``/``truncated`` flags;
+    admission now resets request state."""
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_len=48, slots=2)
+    reqs = [Request(uid=i, prompt=np.arange(4 + i, dtype=np.int32),
+                    max_new_tokens=5) for i in range(3)]
+    first = {r.uid: list(r.generated) for r in eng.run(reqs, max_steps=64)}
+    second_done = eng.run(reqs, max_steps=64)
+    second = {r.uid: list(r.generated) for r in second_done}
+    assert first == second, "second run() of reused Requests diverged"
+    for r in second_done:
+        assert r.done and not r.truncated
+        assert len(r.generated) == 5, \
+            f"stale tokens leaked into reused request {r.uid}"
+    # a truncated partial re-submitted serves from scratch, flags cleared
+    trunc = ServeEngine(params, cfg, max_len=48, slots=1)
+    req = Request(uid=9, prompt=np.arange(4, dtype=np.int32),
+                  max_new_tokens=20)
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("ignore")
+        out = trunc.run([req], max_steps=3)
+    assert out[0].truncated and not out[0].done
+    out2 = trunc.run([req], max_steps=64)
+    assert out2[0].done and not out2[0].truncated
+    assert len(out2[0].generated) == 20

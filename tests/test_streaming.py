@@ -1,0 +1,537 @@
+"""Streaming admission + SLO-aware preemption: scheduler policy (lookahead,
+priority/deadline ordering), suspend/resume token identity, page-accounting
+conservation across suspend→evict→resume cycles, dead-slot masking, and
+once-per-engine warning dedup."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.serve import (OutOfPages, PagedKVCache, Request, ServeEngine,
+                         StreamScheduler, TRASH_PAGE)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _pressure_workload(cfg):
+    """One big low-priority request, then a trickle of small high-priority
+    deadlined requests — the head-of-line / preemption scenario."""
+    big = Request(uid=0,
+                  prompt=(np.arange(24, dtype=np.int32) * 3 + 1)
+                  % cfg.vocab_size,
+                  max_new_tokens=20, priority=0)
+    smalls = [Request(uid=1 + i,
+                      prompt=(np.arange(6, dtype=np.int32) + 11 * i)
+                      % cfg.vocab_size,
+                      max_new_tokens=4, priority=1, deadline_steps=12)
+              for i in range(4)]
+    trace = [(1, big)] + [(3 + 2 * i, r) for i, r in enumerate(smalls)]
+    return big, smalls, trace
+
+
+def _tight_engine(params, cfg, **kw):
+    # 6 usable pages of 8: the big request's worst case (44 tokens = 6
+    # pages) monopolizes a FIFO pool; smalls need 2 pages each
+    kw.setdefault("num_pages", 7)
+    return ServeEngine(params, cfg, max_len=56, slots=2, cache_mode="paged",
+                       page_size=8, **kw)
+
+
+# -- streaming arrivals ------------------------------------------------------
+
+def test_midrun_arrivals_admitted_after_arrival(setup):
+    """run_stream() admits requests as they arrive: never before their
+    trace step, and (with free slots and pages) at their trace step."""
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_len=48, slots=2)
+    rng = np.random.default_rng(5)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=5,
+                                        dtype=np.int32),
+                    max_new_tokens=4) for i in range(4)]
+    trace = [(1, reqs[0]), (4, reqs[1]), (4, reqs[2]), (9, reqs[3])]
+    done = eng.run_stream(trace, max_steps=128)
+    assert len(done) == 4 and all(r.done for r in done)
+    by_uid = {r.uid: r for r in done}
+    for step, r in trace:
+        assert by_uid[r.uid].admit_step >= step, (
+            f"uid {r.uid} admitted before it arrived")
+        assert by_uid[r.uid].queueing_delay >= 0
+    # slots were free at every arrival in this trace: admission is immediate
+    assert by_uid[3].admit_step == 9
+
+
+def test_submit_before_run_stream(setup):
+    """submit() enqueues without a trace; run_stream() then serves the
+    backlog (arrival stamped at submission time = step 0 when idle)."""
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_len=48, slots=2)
+    for i in range(3):
+        eng.submit(Request(uid=i, prompt=np.arange(4 + i, dtype=np.int32),
+                           max_new_tokens=3))
+    done = eng.run_stream(max_steps=64)
+    assert len(done) == 3 and all(r.done for r in done)
+    assert all(r.arrival_step == 0 for r in done)
+
+
+# -- lookahead ---------------------------------------------------------------
+
+def test_lookahead_admits_small_request_past_infeasible_head(setup):
+    """Starvation regression: a head that cannot get pages right now must
+    not block a small request behind it when lookahead > 0 — and must keep
+    blocking it at lookahead=0 (strict FIFO)."""
+    cfg, params = setup
+
+    def workload():
+        # occupant holds 4 of 6 pages for ~14 steps; big head needs 6
+        occupant = Request(uid=0, prompt=np.arange(20, dtype=np.int32),
+                           max_new_tokens=12)
+        big = Request(uid=1,
+                      prompt=(np.arange(30, dtype=np.int32) + 40)
+                      % cfg.vocab_size,
+                      max_new_tokens=14)
+        small = Request(uid=2, prompt=(np.arange(5, dtype=np.int32) + 90)
+                        % cfg.vocab_size, max_new_tokens=3)
+        return [(1, occupant), (2, big), (3, small)]
+
+    fifo = _tight_engine(params, cfg)
+    done_f = fifo.run_stream(workload(), max_steps=256, lookahead=0,
+                             preempt=False)
+    ahead = _tight_engine(params, cfg)
+    done_a = ahead.run_stream(workload(), max_steps=256, lookahead=4,
+                              preempt=False)
+    f = {r.uid: r for r in done_f}
+    a = {r.uid: r for r in done_a}
+    assert all(r.done for r in done_f) and all(r.done for r in done_a)
+    # FIFO: small waits behind the infeasible big head until pages free
+    assert f[2].admit_step > f[1].admit_step - 1 and f[2].queueing_delay > 5
+    # lookahead: small admitted at arrival, straight past the blocked head
+    assert a[2].admit_step == 3, (
+        f"lookahead failed to admit past the head: {a[2].admit_step}")
+    assert a[2].queueing_delay == 0
+    # outputs are token-identical either way (greedy, per-slot isolation)
+    assert {u: r.generated for u, r in f.items()} == \
+        {u: r.generated for u, r in a.items()}
+
+
+# -- preemption --------------------------------------------------------------
+
+def test_preemption_token_identity_and_slo(setup):
+    """The tentpole invariants in one run: under pool pressure the SLO-aware
+    policy suspends the low-priority request (>=1 real preemption), every
+    deadlined request meets its SLO (FIFO meets none), outputs stay
+    token-identical to the unpreempted FIFO run, and no page leaks."""
+    cfg, params = setup
+    big, smalls, trace = _pressure_workload(cfg)
+    slo = _tight_engine(params, cfg)
+    done_s = slo.run_stream(trace, max_steps=256)
+    assert len(done_s) == 5 and all(r.done for r in done_s)
+    assert slo.last_run_preemptions >= 1, "pressure never preempted"
+    by_uid = {r.uid: r for r in done_s}
+    assert by_uid[0].preemptions >= 1
+    assert all(by_uid[u].slo_met for u in (1, 2, 3, 4)), (
+        [(u, by_uid[u].finish_step) for u in (1, 2, 3, 4)])
+    assert slo.kv.pages_in_use() == 0, "preempted run leaked pages"
+    assert slo.kv.stats["suspends"] == slo.kv.stats["resumes"] \
+        == slo.last_run_preemptions
+
+    big2, smalls2, trace2 = _pressure_workload(cfg)
+    fifo = _tight_engine(params, cfg)
+    done_f = fifo.run_stream(trace2, max_steps=256, lookahead=0,
+                             preempt=False)
+    assert fifo.last_run_preemptions == 0
+    f_uid = {r.uid: r for r in done_f}
+    assert not any(f_uid[u].slo_met for u in (1, 2, 3, 4)), \
+        "FIFO baseline unexpectedly met SLOs — workload lost its pressure"
+    assert {u: r.generated for u, r in by_uid.items()} == \
+        {u: r.generated for u, r in f_uid.items()}, (
+        "suspend/resume changed generated tokens")
+
+
+def test_resume_realiases_resident_pages(setup):
+    """A resumed request re-aliases its retained pages (prefix hits) and
+    re-prefills only the evicted tail — not the whole sequence."""
+    cfg, params = setup
+    _, _, trace = _pressure_workload(cfg)
+    eng = _tight_engine(params, cfg)
+    eng.run_stream(trace, max_steps=256)
+    st = eng.kv.stats
+    assert st["resumes"] >= 1
+    # every resume found resident pages to alias (the retained pool held
+    # the suspended sequence's full pages)
+    assert st["prefix_hits"] >= st["resumes"], st
+    assert st["pages_aliased"] >= 2 * st["resumes"], st
+
+
+def test_decode_pressure_suspends_lowest_priority(setup):
+    """On-demand page growth under preemption: when a mid-decode KV write
+    cannot get a page, the lowest-priority live slot is suspended (not a
+    fault, not the high-priority slot)."""
+    cfg, params = setup
+    lo = Request(uid=0, prompt=np.arange(20, dtype=np.int32),
+                 max_new_tokens=24, priority=0)
+    hi = Request(uid=1, prompt=(np.arange(20, dtype=np.int32) + 60)
+                 % cfg.vocab_size, max_new_tokens=24, priority=1)
+    eng = _tight_engine(params, cfg)
+    # both fit at admission (3 pages each of 6); both grow past page
+    # boundaries mid-decode until the pool runs dry
+    done = eng.run_stream([(1, lo), (1, hi)], max_steps=256)
+    assert all(r.done for r in done)
+    assert eng.last_run_preemptions >= 1
+    by_uid = {r.uid: r for r in done}
+    assert by_uid[0].preemptions >= 1, "low-priority slot was not the victim"
+    assert by_uid[1].preemptions == 0, "high-priority slot must not yield"
+    assert by_uid[1].finish_step < by_uid[0].finish_step
+
+
+# -- kv suspend/resume unit + conservation -----------------------------------
+
+def test_kv_suspend_resume_roundtrip():
+    cfg = get_config("tiny")
+    kv = PagedKVCache(cfg, slots=2, max_len=32, page_size=8, num_pages=8)
+    seq = np.arange(19, dtype=np.int32)           # 3 pages, 2 full
+    kv.admit(0, seq, "base")
+    kv.commit_prompt(0, seq, "base")
+    row0 = [int(p) for p in kv.tables[0, :3]]
+    pin = kv.suspend_slot(0, seq, "base", priority=1)
+    # writable pages released, full pages retained (resident, refcount 0),
+    # and the suspension holds an eviction pin until resolved
+    assert kv.pages_in_use() == 0
+    assert kv.pages_resident() == 2
+    assert (kv.tables[0] == TRASH_PAGE).all()
+    assert pin in kv._pins
+    # resume re-aliases both retained pages and re-prefills only the tail
+    pre = kv.resume_slot(1, seq, "base", pin=pin)
+    assert pre == 16, "resume must re-alias every resident full page"
+    assert [int(p) for p in kv.tables[1, :2]] == row0[:2]
+    # only the 2 retained full pages were aliased; the evicted partial tail
+    # came from the free list (a fresh allocation, not an alias)
+    assert kv.stats["pages_aliased"] == 2
+    assert pin not in kv._pins, "resume must release the suspension's pin"
+    kv.free_slot(1)
+    assert kv.pages_in_use() == 0
+
+
+def test_shared_pin_survives_one_dependents_resume():
+    """Two suspended same-prefix sequences pin shared pages; resuming (and
+    finishing) ONE must not strip the other's eviction privilege."""
+    cfg = get_config("tiny")
+    kv = PagedKVCache(cfg, slots=2, max_len=32, page_size=8, num_pages=9)
+    a = np.arange(19, dtype=np.int32)             # shares 2 full pages
+    b = np.concatenate([np.arange(16, dtype=np.int32),
+                        np.arange(5, dtype=np.int32) + 70]).astype(np.int32)
+    kv.admit(0, a, "x")
+    kv.commit_prompt(0, a, "x")
+    pin_a = kv.suspend_slot(0, a, "x", priority=3)
+    pre_b = kv.admit(0, b, "x")
+    assert pre_b == 16                            # aliased a's full pages
+    kv.commit_prompt(0, b, "x")
+    pin_b = kv.suspend_slot(0, b, "x", priority=3)
+    # resume + finish a: its pin dies, but the shared prefix pages must
+    # stay privileged for still-suspended b
+    kv.resume_slot(1, a, "x", pin=pin_a)
+    kv.free_slot(1)
+    shared = [p for p in kv._reusable if kv._evict_key(p)[0] == 3]
+    assert len(shared) >= 2, (
+        "b's pinned pages lost their privilege when a resumed")
+    kv.release_pin(pin_b)
+    assert all(kv._evict_key(p)[0] == 0 for p in kv._reusable)
+
+
+def test_eviction_prefers_chain_tail_within_priority():
+    """Within one priority level the tail of a suspended chain evicts
+    before its head: evicting the head would strand every later page
+    (resume's aliasing walks the hash chain from token 0)."""
+    cfg = get_config("tiny")
+    kv = PagedKVCache(cfg, slots=2, max_len=40, page_size=8, num_pages=6)
+    seq = np.arange(33, dtype=np.int32)           # 5 pages, 4 full
+    kv.admit(0, seq, "x")
+    kv.commit_prompt(0, seq, "x")
+    chain = [int(p) for p in kv.tables[0, :4]]
+    pin = kv.suspend_slot(0, seq, "x", priority=1)
+    assert kv.pages_resident() == 4 and len(kv._free) == 1
+    # two fresh pages force ONE eviction — it must hit the chain's tail
+    kv.admit(1, np.arange(9, dtype=np.int32) + 100, "y")
+    assert kv.stats["evictions"] == 1
+    assert chain[3] not in kv._reusable, "tail page should have evicted"
+    assert all(p in kv._reusable for p in chain[:3])
+    # resume still aliases the intact head run (3 full pages = 24 tokens)
+    kv.free_slot(1)
+    assert kv.resume_slot(0, seq, "x", pin=pin) == 24
+    kv.free_slot(0)
+
+
+def test_suspend_priority_pins_eviction_order():
+    """Under pressure, retained pages of a suspended high-priority request
+    outlive ordinary retained prefix pages (evicted lowest-priority
+    first)."""
+    cfg = get_config("tiny")
+    kv = PagedKVCache(cfg, slots=2, max_len=32, page_size=8, num_pages=7)
+    hi = np.arange(17, dtype=np.int32)            # 3 pages, 2 full
+    kv.admit(0, hi, "hi")
+    kv.commit_prompt(0, hi, "hi")
+    kv.suspend_slot(0, hi, "hi", priority=5)
+    hi_pages = set(kv._page_to_hash) & set(kv._reusable)
+    lo = np.arange(16, dtype=np.int32) + 100      # 2 pages, both registered
+    kv.admit(0, lo, "lo")
+    kv.commit_prompt(0, lo, "lo")
+    kv.free_slot(0)
+    assert kv.pages_resident() == 4 and len(kv._free) == 2
+    # an allocation storm: 4 fresh pages needed, 2 free -> 2 evictions,
+    # which must hit the UNPINNED lo pages, not the suspended hi pages
+    kv.admit(1, np.arange(29, dtype=np.int32) + 200, "other")
+    assert kv.stats["evictions"] == 2
+    assert hi_pages <= set(kv._reusable) | set(
+        p for p in range(kv.num_pages) if kv.refcount[p] > 0)
+    # the hi sequence still resumes with full alias
+    kv.free_slot(1)
+    assert kv.resume_slot(0, hi, "hi") == 16
+
+
+def test_alias_probe_and_exclusive_pages():
+    """The feasibility probes behind the engine's no-futile-preemption
+    guard: alias_probe counts aliasable full pages without state change,
+    exclusive_pages counts what suspending a slot would actually free."""
+    cfg = get_config("tiny")
+    kv = PagedKVCache(cfg, slots=2, max_len=32, page_size=8, num_pages=8)
+    seq = np.arange(19, dtype=np.int32)           # 3 pages, 2 full
+    kv.admit(0, seq, "x")
+    kv.commit_prompt(0, seq, "x")
+    before = kv.pages_resident()
+    assert kv.alias_probe(seq, "x") == 2
+    assert kv.alias_probe(seq, "y") == 0          # adapter-keyed
+    assert kv.pages_resident() == before, "probe mutated allocator state"
+    assert kv.exclusive_pages(0) == 3
+    kv.admit(1, seq, "x")                         # aliases the 2 full pages
+    assert kv.exclusive_pages(0) == 1             # shared pages free nothing
+    assert kv.exclusive_pages(1) == 1
+    assert kv.allocatable_pages() == len(kv._free)
+
+
+def _check_conservation(kv):
+    """Every non-trash page is exactly one of free / retained / referenced,
+    and per-page refcounts equal the number of owning slots."""
+    free, retained = set(kv._free), set(kv._reusable)
+    referenced = {p for p in range(1, kv.num_pages) if kv.refcount[p] > 0}
+    assert not free & retained
+    assert not referenced & (free | retained)
+    assert free | retained | referenced == set(range(1, kv.num_pages)), (
+        "page leak: some page is neither free, retained, nor referenced")
+    owners = {}
+    for owned in kv._owned:
+        for p in owned:
+            owners[p] = owners.get(p, 0) + 1
+    for p in range(1, kv.num_pages):
+        assert int(kv.refcount[p]) == owners.get(p, 0), (
+            f"page {p}: refcount {int(kv.refcount[p])} != "
+            f"{owners.get(p, 0)} owners")
+    assert int(kv.refcount[TRASH_PAGE]) == 0
+
+
+def _random_roundtrip(seed, steps=150):
+    """Random admit/suspend/evict/resume/grow/free schedule; conservation
+    invariants must hold after every operation."""
+    rng = np.random.default_rng(seed)
+    cfg = get_config("tiny")
+    kv = PagedKVCache(cfg, slots=3, max_len=32, page_size=8,
+                      num_pages=int(rng.integers(5, 11)),
+                      retain_prefix_cache=bool(rng.integers(0, 2)))
+    live = {}          # slot -> resident seq
+    suspended = []     # (seq, pin) parked via suspend_slot
+    cap = kv.pages_per_slot * kv.page_size
+    for _ in range(steps):
+        op = int(rng.integers(0, 5))
+        free_slots = [s for s in range(kv.slots) if s not in live]
+        if op == 0 and free_slots:                      # admit fresh
+            n = int(rng.integers(1, cap + 1))
+            seq = rng.integers(0, 40, size=n).astype(np.int32)
+            try:
+                kv.admit(free_slots[0], seq, "a")
+            except (OutOfPages, ValueError):
+                continue
+            kv.commit_prompt(free_slots[0], seq, "a")
+            live[free_slots[0]] = seq
+        elif op == 1 and free_slots and suspended:      # resume
+            seq, pin = suspended.pop()
+            try:
+                kv.resume_slot(free_slots[0], seq, "a", pin=pin)
+            except OutOfPages:
+                suspended.append((seq, pin))
+                continue
+            live[free_slots[0]] = seq
+        elif op == 2 and live:                          # suspend
+            slot = int(rng.choice(list(live)))
+            pin = kv.suspend_slot(slot, live[slot], "a",
+                                  priority=int(rng.integers(0, 3)))
+            suspended.append((live.pop(slot), pin))
+        elif op == 3 and live:                          # on-demand growth
+            slot = int(rng.choice(list(live)))
+            pos = min(len(live[slot]) + int(rng.integers(0, 9)), cap - 1)
+            try:
+                kv.ensure_position(slot, pos)
+            except OutOfPages:
+                continue
+        elif op == 4 and live:                          # complete
+            slot = int(rng.choice(list(live)))
+            kv.free_slot(slot)
+            live.pop(slot)
+        _check_conservation(kv)
+    for slot in list(live):
+        kv.free_slot(slot)
+    for _seq, pin in suspended:          # abandoned suspensions
+        kv.release_pin(pin)
+    _check_conservation(kv)
+    assert kv.pages_in_use() == 0, "drained allocator still references pages"
+    assert not kv._pins, "resolved suspensions leaked eviction pins"
+
+
+def test_refcount_conservation_random_schedules_seeded():
+    for seed in range(8):
+        _random_roundtrip(seed)
+
+
+def test_refcount_conservation_random_schedules_hypothesis():
+    hypothesis = pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (requirements-dev)")
+    import hypothesis.strategies as st
+
+    @hypothesis.given(st.integers(0, 10**6))
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def prop(seed):
+        _random_roundtrip(seed, steps=80)
+
+    prop()
+
+
+# -- dead-slot masking -------------------------------------------------------
+
+def test_dead_slots_masked_and_trash_mapped(setup):
+    """While one slot decodes and the other is dead, the dead row's decode
+    position is pinned to 0 and its table rows stay all-trash (the engine
+    asserts this every step); after the run every slot is reset."""
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_len=48, slots=2)
+    # staggered budgets: uid 0 finishes ~9 steps before uid 1, leaving a
+    # dead slot decoding as a ghost next to a live one
+    done = eng.run([Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                            max_new_tokens=3),
+                    Request(uid=1, prompt=np.arange(7, dtype=np.int32),
+                            max_new_tokens=12)], max_steps=64)
+    assert all(r.done for r in done)
+    assert eng.last_decode_positions is not None
+    # the final decode ran with uid 1 live and uid 0's slot dead
+    dead = [i for i in range(2) if eng.active[i] is None]
+    assert dead == [0, 1]           # all drained post-run
+    assert (eng.positions == 0).all()
+    assert (eng.kv.tables == TRASH_PAGE).all()
+    # the recorded positions vector of the last step: exactly one live row
+    assert (eng.last_decode_positions == 0).sum() >= 1
+
+
+def test_dead_slot_table_corruption_is_loud(setup):
+    """A table bug that leaves a dead slot mapping real pages must trip the
+    engine's decode assertion instead of silently absorbing ghost writes."""
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_len=48, slots=2)
+    eng.submit(Request(uid=0, prompt=np.arange(5, dtype=np.int32),
+                       max_new_tokens=6))
+    # corrupt: fake a stale mapping on the dead slot 1
+    eng.kv.tables[1, 0] = 2
+    with pytest.raises(AssertionError, match="dead slot"):
+        eng.run_stream(max_steps=32)
+    eng.kv.tables[1, 0] = TRASH_PAGE    # undo for teardown sanity
+
+
+# -- warning dedup + diagnosable OutOfPages ----------------------------------
+
+def test_dense_fallback_warns_once_per_engine(setup):
+    """The dense-delta bank fallback warning fires once per engine, not on
+    every bank rebuild."""
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_len=32, slots=1)
+
+    def dense_variant(eps):
+        v = jax.tree.map(lambda x: x, eng.adapters["base"])
+        v = jax.tree.map(lambda x: x, v)
+        lp = v["layers"]
+        lp["attn"]["q"]["w"] = lp["attn"]["q"]["w"] + eps
+        return v
+
+    none_cfg = cfg.peft.replace(method="none", target_modules=())
+    with warnings.catch_warnings(record=True) as w1:
+        warnings.simplefilter("always")
+        eng.register_adapter("full_ft", dense_variant(0.01), none_cfg)
+        eng._banked_tree()
+    assert sum("DENSE delta fallback" in str(w.message) for w in w1) == 1
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        # bank rebuild (new adapter set) used to re-fire the warning
+        eng.register_adapter("full_ft2", dense_variant(0.02), none_cfg)
+        eng._banked_tree()
+    assert sum("DENSE delta fallback" in str(w.message) for w in w2) == 0
+
+
+def test_truncation_warns_once_per_engine(setup):
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_len=48, slots=1)
+
+    def truncated_run():
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            out = eng.run([Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                                   max_new_tokens=30)], max_steps=2)
+        assert out[0].truncated
+        return sum("max_steps" in str(w.message) for w in caught)
+
+    assert truncated_run() == 1
+    assert truncated_run() == 0, "second truncated run re-fired the warning"
+
+
+def test_out_of_pages_reports_pool_pressure():
+    """OutOfPages must carry resident/retained counts so pool-pressure
+    deadlocks are diagnosable from the message alone."""
+    cfg = get_config("tiny")
+    kv = PagedKVCache(cfg, slots=2, max_len=32, page_size=8, num_pages=4)
+    kv.admit(0, np.arange(17, dtype=np.int32), "base")
+    with pytest.raises(OutOfPages, match="resident") as exc:
+        kv.admit(1, np.arange(20, dtype=np.int32), "base")
+    assert "retained" in str(exc.value)
+
+
+# -- scheduler unit ----------------------------------------------------------
+
+def test_scheduler_policy_ordering():
+    sched = StreamScheduler(lookahead=8, preempt=True)
+    lo = Request(uid=0, prompt=np.arange(4), priority=0)
+    hi = Request(uid=1, prompt=np.arange(4), priority=2)
+    tight = Request(uid=2, prompt=np.arange(4), priority=1,
+                    deadline_steps=8, max_new_tokens=4)
+    loose = Request(uid=3, prompt=np.arange(4), priority=1,
+                    deadline_steps=40, max_new_tokens=4)
+    for r in (lo, hi, tight, loose):
+        sched.push(r)
+    order = [r.uid for r, _ in sched.window(step=1)]
+    assert order == [1, 2, 3, 0], order
+    # tight's slack shrinks to the risk margin as steps pass
+    assert not sched.at_risk(tight, step=0)
+    assert sched.at_risk(tight, step=2)
+    # lookahead bounds the window (only pending[:1+lookahead] compete)
+    sched.configure(lookahead=1, preempt=True)
+    assert len(sched.window(step=1)) == 2
+    sched.remove(hi)
+    assert [r.uid for r, _ in sched.window(step=1)] == [2, 0]
+    # FIFO degeneration: uniform priorities, no deadlines
+    fifo = StreamScheduler(lookahead=3, preempt=False)
+    reqs = [Request(uid=i, prompt=np.arange(3)) for i in range(3)]
+    for r in reqs:
+        fifo.push(r)
+    assert [r.uid for r, _ in fifo.window(step=1)] == [0, 1, 2]
