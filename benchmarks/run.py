@@ -12,6 +12,7 @@
     heterogeneous-adapter serving -> bench_serve
     paged vs dense KV cache       -> bench_paged_kv
     streaming admission + SLOs    -> bench_streaming
+    fused sampling + early stop   -> bench_sampling
 
 ``--quick`` runs the CI smoke subset (CPU): the dispatch hot path — so
 PEFT-registry regressions are visible on every push — the closed-form Table 8
@@ -34,18 +35,20 @@ def main(quick: bool = False, json_path: str = "") -> None:
     from benchmarks import (bench_activation_memory, bench_convergence,
                             bench_dispatch, bench_geometry, bench_kernels,
                             bench_neumann, bench_paged_kv, bench_params,
-                            bench_serve, bench_speed, bench_streaming)
+                            bench_sampling, bench_serve, bench_speed,
+                            bench_streaming)
     from benchmarks import common
     if quick:
         mods = [(bench_params, {}), (bench_dispatch, {"quick": True}),
                 (bench_serve, {"quick": True}),
                 (bench_paged_kv, {"quick": True}),
-                (bench_streaming, {"quick": True})]
+                (bench_streaming, {"quick": True}),
+                (bench_sampling, {"quick": True})]
     else:
         mods = [(bench_params, {}), (bench_geometry, {}), (bench_neumann, {}),
                 (bench_kernels, {}), (bench_dispatch, {}),
                 (bench_serve, {}), (bench_paged_kv, {}),
-                (bench_streaming, {}),
+                (bench_streaming, {}), (bench_sampling, {}),
                 (bench_activation_memory, {}), (bench_speed, {}),
                 (bench_convergence, {})]
     failed = []

@@ -1,0 +1,66 @@
+"""Per-request sampling example: one engine, one decode executable, mixed
+greedy / creative / stop-token / logprobs traffic.
+
+    PYTHONPATH=src python examples/serve_sampling.py
+
+Every request carries its own ``SamplingParams``; the fused on-device
+sampler stacks them per slot, so the mix below (greedy argmax next to
+seeded top-k/top-p sampling next to stop-token early termination) shares
+one compiled decode step — no per-request recompiles.  Seeds are
+counter-based: re-running this script reproduces every sampled token.
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.serve import Request, SamplingParams, ServeEngine
+
+cfg = get_config("tiny")
+params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+engine = ServeEngine(params, cfg, max_len=64, slots=2)
+
+rng = np.random.default_rng(0)
+prompt = lambda n: rng.integers(0, cfg.vocab_size, size=n, dtype=np.int32)  # noqa: E731
+
+# discover a token the greedy continuation emits, to use as a stop id below
+probe = engine.run([Request(uid=100, prompt=np.arange(8, dtype=np.int32),
+                            max_new_tokens=8)])[0]
+stop_id = probe.generated[3]
+
+shared = prompt(6)
+reqs = [
+    # deterministic: greedy argmax (the engine default — no params needed)
+    Request(uid=0, prompt=prompt(8), max_new_tokens=10),
+    # creative: temperature + nucleus sampling, reproducible via seed
+    Request(uid=1, prompt=shared.copy(), max_new_tokens=10,
+            sampling=SamplingParams(temperature=0.9, top_k=50, top_p=0.95,
+                                    seed=1234)),
+    # same params + seed + prompt as uid 1 -> identical tokens, by design
+    Request(uid=2, prompt=shared.copy(), max_new_tokens=10,
+            sampling=SamplingParams(temperature=0.9, top_k=50, top_p=0.95,
+                                    seed=1234)),
+    # early termination: stops the moment stop_id is emitted, freeing its
+    # KV pages for the next queued request mid-run
+    Request(uid=3, prompt=np.arange(8, dtype=np.int32), max_new_tokens=10,
+            sampling=SamplingParams.greedy(stop_token_ids=(stop_id,))),
+    # eval/distillation: greedy + per-token top-3 logprobs
+    Request(uid=4, prompt=prompt(7), max_new_tokens=4,
+            sampling=SamplingParams.greedy(logprobs=3)),
+]
+
+done = {r.uid: r for r in engine.run(reqs)}
+for uid in range(5):
+    r = done[uid]
+    print(f"req {uid}: finish_reason={r.finish_reason!r:8} "
+          f"generated={r.generated}")
+
+assert done[1].generated == done[2].generated, "seeded draws must reproduce"
+assert done[3].finish_reason == "stop" and done[3].generated[-1] == stop_id
+print(f"\nstop request finished after {len(done[3].generated)} of "
+      f"{done[3].max_new_tokens} tokens (pages freed early)")
+print("\nper-token logprobs of req 4 (model distribution, top-3):")
+for step, lp in enumerate(done[4].logprobs):
+    alts = ", ".join(f"{t}:{p:.2f}" for t, p in zip(lp.top_tokens,
+                                                    lp.top_logprobs))
+    print(f"  step {step}: chose {lp.token} ({lp.logprob:.2f})  [{alts}]")

@@ -1,4 +1,6 @@
 from repro.serve.engine import BASE_ADAPTER, Request, ServeEngine  # noqa: F401
 from repro.serve.kv_cache import (  # noqa: F401
     OutOfPages, PagedKVCache, TRASH_PAGE)
+from repro.serve.sampling import (  # noqa: F401
+    MAX_LOGPROBS, SamplingParams, TokenLogprobs)
 from repro.serve.scheduler import StreamScheduler  # noqa: F401

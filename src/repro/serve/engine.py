@@ -37,6 +37,18 @@ resident and re-prefills only the evicted tail).  The historical static API
 strict FIFO, worst-case page reservation, no preemption — and stays
 token-identical to the pre-streaming engine.
 
+Generation control is per-request (:mod:`repro.serve.sampling`): every
+request carries a :class:`SamplingParams` (temperature / top-k / top-p /
+seed / stop tokens / logprobs) or inherits the engine default.  Each step
+the live slots' parameters are stacked into ``(slots,)`` device arrays and
+one fused jitted sampler draws every slot's next token on device — the
+parameters are data, not trace constants, so a mixed greedy/creative batch
+shares one executable exactly like ``adapter_ids`` shares the bank path.
+Draws are counter-based (``fold_in(PRNGKey(seed), n_generated)``): a pure
+function of ``(seed, position)``, reproducible across preemption and
+admission order.  A slot that emits one of its stop ids finishes
+immediately, frees its pages, and refills mid-decode.
+
 All requests share one compiled prefill executable per prompt bucket and one
 decode executable; adding an adapter grows the bank (a recompile), serving it
 costs a gather.
@@ -54,7 +66,9 @@ import numpy as np
 from repro.configs.base import ModelConfig, PEFTConfig
 from repro.core import peft as peft_lib, registry as peft_registry
 from repro.models import model as model_lib
+from repro.serve import sampling as sampling_lib
 from repro.serve.kv_cache import OutOfPages, PagedKVCache, TRASH_PAGE
+from repro.serve.sampling import SamplingParams, TokenLogprobs
 from repro.serve.scheduler import StreamScheduler
 
 #: adapter name every request uses unless it asks for something else
@@ -69,6 +83,11 @@ _PAGED_FAMILIES = ("dense", "moe", "vlm")
 #: (router diffs instead hit the loud non-linear-leaf check below).
 _LINEAR_MODULES = frozenset(model_lib._MODULE_NAMES) - {"router"}
 
+#: sentinel distinguishing "kwarg not passed" from any real value, so the
+#: deprecated ``greedy=``/``temperature=`` shim only fires when a caller
+#: actually uses the legacy engine-global sampling API
+_LEGACY_UNSET = object()
+
 
 @dataclasses.dataclass
 class Request:
@@ -76,6 +95,8 @@ class Request:
     prompt: np.ndarray              # (S,) int32
     max_new_tokens: int = 16
     adapter: str = BASE_ADAPTER     # which registered adapter serves this
+    #: per-request generation control; None inherits the engine default
+    sampling: Optional[SamplingParams] = None
     #: scheduling weight: higher-priority requests are admitted first and
     #: may preempt lower-priority running slots under page pressure
     priority: int = 0
@@ -83,6 +104,14 @@ class Request:
     deadline_steps: Optional[int] = None
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    #: why the request completed: "stop" (emitted one of its
+    #: ``stop_token_ids``, included in ``generated``) or "length"
+    #: (``max_new_tokens`` / ``max_len`` reached); None while running or
+    #: truncated
+    finish_reason: Optional[str] = None
+    #: per generated token, when ``sampling.logprobs > 0``: the chosen
+    #: token's model logprob + the top alternatives (eval/distillation)
+    logprobs: List[TokenLogprobs] = dataclasses.field(default_factory=list)
     #: run() hit max_steps before this request finished (generated holds the
     #: partial output; done stays False)
     truncated: bool = False
@@ -112,6 +141,13 @@ class Request:
             return False
         return self.finish_step - self.arrival_step <= self.deadline_steps
 
+    @property
+    def remaining_tokens(self) -> int:
+        """Upper bound on tokens left to generate (the scheduler's
+        remaining-work estimate).  A stop token may finish the request
+        sooner — early finishes only ever *improve* deadline slack."""
+        return max(self.max_new_tokens - len(self.generated), 0)
+
 
 class ServeEngine:
     """Fixed-slot continuous batcher over decode_step.
@@ -126,18 +162,21 @@ class ServeEngine:
     paged path is token-identical to), or ``"auto"`` (paged for attention
     families, dense for SSM/hybrid whose recurrent states don't page).
 
-    ``greedy=False`` samples with ``temperature`` from a generator seeded by
-    ``sample_seed`` (one host-side draw per generated token, deterministic
-    for a fixed workload); ``greedy=True`` argmaxes, bit-identically to the
-    historical engine.
+    ``sampling`` is the default :class:`SamplingParams` for requests that
+    don't carry their own (engine default: greedy argmax, bit-identical to
+    the historical engine); ``sample_seed`` seeds the per-request derived
+    seeds of requests whose params don't pin one.  The engine-global
+    ``greedy=``/``temperature=`` kwargs are DEPRECATED shims that build the
+    default ``SamplingParams`` (``greedy=True`` -> ``temperature=0``).
     """
 
     def __init__(self, params, cfg: ModelConfig, max_len: int = 256,
-                 slots: int = 4, greedy: bool = True,
+                 slots: int = 4, greedy=_LEGACY_UNSET,
                  use_fused_kernel: bool = False, cache_mode: str = "auto",
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 retain_prefix_cache: bool = True, temperature: float = 1.0,
-                 sample_seed: int = 0):
+                 retain_prefix_cache: bool = True,
+                 temperature=_LEGACY_UNSET, sample_seed: int = 0,
+                 sampling: Optional[SamplingParams] = None):
         # serving config: every linear is a plain {"w"} (+bank) after merging
         self.cfg = dataclasses.replace(
             cfg, peft=PEFTConfig(method="none", target_modules=(),
@@ -154,9 +193,31 @@ class ServeEngine:
         self._serve_tree = None                   # rebuilt lazily on register
         self.max_len = max_len
         self.slots = slots
-        self.greedy = greedy
-        self.temperature = temperature
-        self._rng = np.random.default_rng(sample_seed)
+        legacy = {}
+        if greedy is not _LEGACY_UNSET:
+            legacy["greedy"] = bool(greedy)
+        if temperature is not _LEGACY_UNSET:
+            legacy["temperature"] = float(temperature)
+        if legacy:
+            warnings.warn(
+                f"ServeEngine({', '.join(k + '=...' for k in legacy)}) is "
+                f"deprecated: sampling is per-request now — pass "
+                f"sampling=SamplingParams(...) as the engine default or set "
+                f"Request.sampling",
+                DeprecationWarning, stacklevel=2)
+            if sampling is not None:
+                raise ValueError(
+                    "pass either sampling= or the deprecated "
+                    "greedy=/temperature= kwargs, not both")
+            sampling = SamplingParams(
+                temperature=0.0 if legacy.get("greedy", True)
+                else legacy.get("temperature", 1.0))
+        self.default_sampling = (SamplingParams.greedy() if sampling is None
+                                 else sampling)
+        self.default_sampling.validate(self.cfg.vocab_size)
+        self.sample_seed = int(sample_seed)
+        #: the fused batched sampler (tests swap in host references)
+        self._sample_fn = sampling_lib.sample_tokens
 
         if cache_mode == "auto":
             cache_mode = ("paged" if cfg.family in _PAGED_FAMILIES
@@ -214,6 +275,12 @@ class ServeEngine:
         #: streaming admission policy; run() pins it to strict FIFO,
         #: run_stream() reconfigures it per call
         self.scheduler = StreamScheduler()
+        #: uids currently queued or active — duplicate uids would silently
+        #: corrupt admission_log/preemption bookkeeping, so submit() raises
+        self._inflight: set = set()
+        #: uids of a run_stream arrival trace not yet injected (validated
+        #: up front; mid-run submit() must not collide with them either)
+        self._pending_trace_uids: set = set()
         self._step = 0              # current engine step (0 when idle)
         #: positions vector of the last decode step (dead rows pinned to 0)
         self.last_decode_positions: Optional[np.ndarray] = None
@@ -227,6 +294,17 @@ class ServeEngine:
     def params(self):
         """Merged weights of the base adapter (historical attribute)."""
         return self.adapters[BASE_ADAPTER]
+
+    @property
+    def greedy(self) -> bool:
+        """Whether the engine-default sampling is greedy (historical
+        attribute; sampling is per-request now)."""
+        return self.default_sampling.is_greedy
+
+    @property
+    def temperature(self) -> float:
+        """Engine-default sampling temperature (historical attribute)."""
+        return self.default_sampling.temperature
 
     def register_adapter(self, name: str, params,
                          peft_cfg: Optional[PEFTConfig] = None) -> None:
@@ -333,18 +411,58 @@ class ServeEngine:
         return self._serve_tree
 
     # -- sampling ----------------------------------------------------------
-    def _select_token(self, row: np.ndarray) -> int:
-        """Next token from one row of last-position logits (vocab-truncated).
+    def _sampling_for(self, r: Request) -> SamplingParams:
+        return r.sampling if r.sampling is not None else self.default_sampling
 
-        Greedy argmax by default (bit-identical to the historical engine);
-        with ``greedy=False``, a seeded host-side temperature draw."""
-        if self.greedy:
-            return int(row.argmax())
-        z = row.astype(np.float64) / max(float(self.temperature), 1e-6)
-        z -= z.max()
-        p = np.exp(z)
-        p /= p.sum()
-        return int(self._rng.choice(row.shape[-1], p=p))
+    def _seed_for(self, r: Request) -> int:
+        sp = self._sampling_for(r)
+        return sp.seed if sp.seed is not None \
+            else sampling_lib.derive_seed(self.sample_seed, r.uid)
+
+    def _sample_rows(self, logits_rows,
+                     reqs: List[Optional[Request]]) -> np.ndarray:
+        """Draw every row's next token in ONE fused on-device call.
+
+        ``logits_rows`` is the ``(B, vocab)`` last-position logits slice
+        (kept on device — only the sampled token ids come back to the
+        host); ``reqs[j]`` is the request row ``j`` samples for, or None
+        for rows whose draw is discarded (ghost slots, resumed requests
+        whose next token was sampled before suspension).  Each live row's
+        draw is ``fold_in(PRNGKey(seed), len(generated))`` — discarded
+        rows burn no RNG state, so schedules never shift later draws.
+        The caller MUST append the returned token for every non-None row
+        (logprob recording assumes it)."""
+        greedy = SamplingParams.greedy()
+        entries = []
+        for r in reqs:
+            if r is None:
+                entries.append((greedy, 0, 0))
+            else:
+                entries.append((self._sampling_for(r), self._seed_for(r),
+                                len(r.generated)))
+        temps, ks, ps, seeds, counters = sampling_lib.stack(entries)
+        want_lp = any(r is not None and self._sampling_for(r).logprobs
+                      for r in reqs)
+        toks, chosen, top_ids, top_lps = self._sample_fn(
+            logits_rows, temps, ks, ps, seeds, counters,
+            want_logprobs=want_lp)
+        toks = np.asarray(toks)
+        if want_lp:
+            chosen = np.asarray(chosen)
+            top_ids, top_lps = np.asarray(top_ids), np.asarray(top_lps)
+            for j, r in enumerate(reqs):
+                n = 0 if r is None else self._sampling_for(r).logprobs
+                if n:
+                    r.logprobs.append(TokenLogprobs(
+                        int(toks[j]), float(chosen[j]),
+                        tuple(int(t) for t in top_ids[j, :n]),
+                        tuple(float(v) for v in top_lps[j, :n])))
+        return toks
+
+    def _hit_stop(self, r: Request) -> bool:
+        """Whether the request's latest token is one of its stop ids."""
+        return bool(r.generated) and \
+            r.generated[-1] in self._sampling_for(r).stop_token_ids
 
     # -- admission ---------------------------------------------------------
     def _bucket(self, plen: int) -> int:
@@ -421,8 +539,8 @@ class ServeEngine:
             logits, cache = self._prefill(
                 tree, {"tokens": jnp.asarray(toks)}, jnp.asarray(lens),
                 jnp.asarray(ids))
-            rows = np.asarray(logits[:, -1, :self.cfg.vocab_size])
-            nxt = [self._select_token(rows[j]) for j in range(len(group))]
+            nxt = self._sample_rows(logits[:, -1, :self.cfg.vocab_size],
+                                    [e[1] for e in group])
             for j, (slot, r, _pref, _seq, _res) in enumerate(group):
                 self._install_cache(slot, cache, j)
             self._record_admissions(step, group, nxt)
@@ -566,10 +684,13 @@ class ServeEngine:
                 jnp.asarray(rows_pt), jnp.asarray(rows_pt[:, :n_pref]),
                 jnp.asarray(lens), jnp.asarray(prefs), jnp.asarray(ids))
             kv.pools = new_pools
-            rows = np.asarray(logits[:, -1, :self.cfg.vocab_size])
             # a resumed request's next token was sampled before suspension:
-            # the tail-rebuild logits are discarded, no RNG draw happens
-            nxt = [None if group[j][4] else self._select_token(rows[j])
+            # its row is passed as None, so the tail-rebuild logits are
+            # discarded and (counter-based RNG) no later draw shifts
+            toks_out = self._sample_rows(
+                logits[:, -1, :self.cfg.vocab_size],
+                [None if e[4] else e[1] for e in group])
+            nxt = [None if group[j][4] else int(toks_out[j])
                    for j in range(g)]
             for slot, r, _pref, seq, _res in group:
                 kv.commit_prompt(slot, seq, r.adapter)
@@ -649,21 +770,52 @@ class ServeEngine:
             logits, self.cache = self._decode(
                 tree, {"tokens": jnp.asarray(toks)}, self.cache,
                 jnp.asarray(positions), jnp.asarray(ids))
-        return np.asarray(logits[:, -1, :self.cfg.vocab_size]), live
+        # stay on device: the fused sampler consumes this slice and only
+        # token ids (not (slots, vocab) logits) cross back to the host
+        return logits[:, -1, :self.cfg.vocab_size], live
 
-    def _finish_slot(self, slot: int, finished: List[Request], step: int):
+    def _finish_slot(self, slot: int, finished: List[Request], step: int,
+                     reason: str = "length"):
         r = self.active[slot]
         r.done = True
+        r.finish_reason = reason
         r.finish_step = step
         finished.append(r)
+        self._inflight.discard(r.uid)
         self.active[slot] = None
         self.positions[slot] = 0
         if self.cache_mode == "paged":
             self.kv.free_slot(slot)
 
+    def _finish_admitted(self, finished: List[Request], step: int) -> None:
+        """Finish slots whose prefill-sampled FIRST token already completed
+        the request (a stop id, or ``max_new_tokens == 1``), freeing their
+        pages and refilling the slots before this step's decode — early
+        termination never waits out a decode step."""
+        while True:
+            ended = False
+            for i, r in enumerate(self.active):
+                if r is None:
+                    continue
+                if self._hit_stop(r):
+                    self._finish_slot(i, finished, step, reason="stop")
+                    ended = True
+                elif len(r.generated) >= r.max_new_tokens:
+                    self._finish_slot(i, finished, step)
+                    ended = True
+            if not ended:
+                return
+            self._admit(step)   # refill the freed slots immediately
+
     # -- request intake ----------------------------------------------------
     def _validate(self, r: Request) -> None:
         self._adapter_params(r.adapter)  # fail fast on unknown adapters
+        try:
+            # rejects stop ids >= vocab_size, bad temperature/top_k/top_p,
+            # logprobs beyond the sampler's fixed output width
+            self._sampling_for(r).validate(self.cfg.vocab_size)
+        except ValueError as e:
+            raise ValueError(f"request {r.uid}: {e}") from None
         if not 0 < len(r.prompt) < self.max_len:
             raise ValueError(
                 f"request {r.uid}: prompt length {len(r.prompt)} must be "
@@ -690,20 +842,32 @@ class ServeEngine:
         step unless ``arrival_step`` overrides it).
 
         A finished/truncated ``Request`` object submitted again is RESET
-        (``generated``/``done``/``truncated`` cleared): re-serving used to
-        silently append new tokens to the stale output and keep stale
-        completion flags."""
+        (``generated``/``logprobs``/``done``/``truncated``/``finish_reason``
+        cleared): re-serving used to silently append new tokens to the stale
+        output and keep stale completion flags.  A uid already queued or
+        active raises — duplicate in-flight uids would silently corrupt the
+        uid-keyed admission/preemption bookkeeping."""
         if not _validated:
             self._validate(request)
+        if request.uid in self._inflight \
+                or request.uid in self._pending_trace_uids:
+            raise ValueError(
+                f"request uid {request.uid} is already queued or active — "
+                f"in-flight uids must be unique (admission_log/preemption "
+                f"bookkeeping is uid-keyed, duplicates would silently "
+                f"corrupt it)")
         if request.generated or request.done or request.truncated:
             request.generated = []
+            request.logprobs = []
             request.done = False
             request.truncated = False
+        request.finish_reason = None
         request.admit_step = None
         request.finish_step = None
         request.preemptions = 0
         request.arrival_step = (self._step if arrival_step is None
                                 else arrival_step)
+        self._inflight.add(request.uid)
         self.scheduler.push(request)
 
     # -- serving -----------------------------------------------------------
@@ -722,8 +886,14 @@ class ServeEngine:
         ``done=False, truncated=True`` (partial ``generated`` preserved, a
         warning emitted, ``last_run_truncated`` set).  Truncated slots are
         drained and their pages freed, so the engine is reusable."""
+        seen = set()
         for r in requests:
             self._validate(r)          # all-or-nothing before any enqueue
+            if r.uid in seen or r.uid in self._inflight:
+                raise ValueError(
+                    f"duplicate request uid {r.uid} in run() batch — "
+                    f"in-flight uids must be unique")
+            seen.add(r.uid)
         for r in requests:
             self.submit(r, arrival_step=0, _validated=True)
         return self.run_stream(max_steps=max_steps, lookahead=0,
@@ -751,9 +921,19 @@ class ServeEngine:
         preempt = preempt and self.cache_mode == "paged"
         self.scheduler.configure(lookahead, preempt)
         trace = sorted(arrivals, key=lambda a: a[0]) if arrivals else []
+        trace_uids = set()
         for _, r in trace:
             self._validate(r)
+            if r.uid in trace_uids or r.uid in self._inflight:
+                raise ValueError(
+                    f"duplicate request uid {r.uid} in arrivals trace — "
+                    f"in-flight uids must be unique")
+            trace_uids.add(r.uid)
         tree = self._banked_tree()
+        # claim the trace uids only once nothing before the loop can raise
+        # (a _banked_tree failure must not leave ghost uids blocking
+        # submit() forever)
+        self._pending_trace_uids = trace_uids
         finished: List[Request] = []
         steps = 0
         max_live = 0
@@ -767,9 +947,13 @@ class ServeEngine:
             while (next_arrival < len(trace)
                     and trace[next_arrival][0] <= steps):
                 s, r = trace[next_arrival]
+                self._pending_trace_uids.discard(r.uid)
                 self.submit(r, arrival_step=s, _validated=True)
                 next_arrival += 1
             self._admit(steps)
+            # a prefill-sampled first token may already be a stop id (or
+            # the whole budget): finish + refill before decoding
+            self._finish_admitted(finished, steps)
             live = [i for i, r in enumerate(self.active) if r is not None]
             max_live = max(max_live, len(live))
             if not live:
@@ -786,11 +970,18 @@ class ServeEngine:
                         f" retained)")
                 continue
             rows, live = self._decode_live(tree, live, steps)
+            if live:
+                toks = self._sample_rows(
+                    rows, [self.active[i] for i in range(self.slots)])
             for i in live:
                 r = self.active[i]
-                r.generated.append(self._select_token(rows[i]))
+                r.generated.append(int(toks[i]))
                 self.positions[i] += 1
-                if (len(r.generated) >= r.max_new_tokens
+                if self._hit_stop(r):
+                    # stop id emitted: finish NOW — pages free this step
+                    # and the slot refills at the next admission pass
+                    self._finish_slot(i, finished, steps, reason="stop")
+                elif (len(r.generated) >= r.max_new_tokens
                         or self.positions[i] >= self.max_len - 1):
                     self._finish_slot(i, finished, steps)
         #: engine iterations the last run took — the deterministic
@@ -821,6 +1012,7 @@ class ServeEngine:
                     continue
                 r.truncated = True
                 finished.append(r)
+                self._inflight.discard(r.uid)
                 self.active[i] = None
                 self.positions[i] = 0
                 if self.cache_mode == "paged":
@@ -833,9 +1025,11 @@ class ServeEngine:
                     # ordinary residency instead of pinning them forever
                     self.kv.release_pin(pin)
                     r._kv_pin = None
+                self._inflight.discard(r.uid)
                 finished.append(r)
             for _, r in trace[next_arrival:]:
                 r.truncated = True
                 finished.append(r)
+        self._pending_trace_uids = set()
         self._step = 0
         return finished

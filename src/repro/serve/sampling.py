@@ -1,0 +1,256 @@
+"""Per-request sampling: :class:`SamplingParams` + a fused on-device
+batched sampler.
+
+Generation control is a *request* property, not an engine property: every
+:class:`repro.serve.engine.Request` carries (or inherits from the engine
+default) a :class:`SamplingParams` — temperature / top-k / top-p filtering,
+a reproducibility seed, stop-token ids, and optional per-token logprobs.
+The engine stacks the live slots' parameters into ``(slots,)`` device
+arrays each step, so they are **data, not trace constants**: one jitted
+:func:`sample_tokens` executable serves any per-request mix (a mixed
+greedy/creative batch never recompiles — exactly how ``adapter_ids`` keeps
+the bank path mix-agnostic).
+
+**RNG design.**  Draws are counter-based: token ``n`` of a request is
+sampled with ``fold_in(PRNGKey(seed), n)`` — a pure function of
+``(seed, position)``, with no sequential RNG state anywhere.  That makes
+sampled outputs reproducible across preemption (suspend/resume re-feeds the
+preserved last token; the discarded tail-rebuild logits burn no state),
+admission order, co-batch composition, and engine restarts — guarantees a
+shared host-side generator fundamentally cannot give, because any schedule
+change permutes the draw order.
+
+**Greedy.**  ``temperature=0`` (or :meth:`SamplingParams.greedy`) argmaxes
+over the full vocabulary, bit-identically to the historical host-side
+engine — pinned in ``tests/test_sampling.py``.  Rows mix freely: the
+sampler computes both paths and selects per row.
+
+**Bounded support.**  Sampled (non-greedy) rows draw from the
+:data:`MAX_CANDIDATES` highest-scoring tokens: one ``lax.top_k`` pass
+replaces a full-vocab sort (XLA's CPU sort is ~20x slower) and the
+categorical draw runs in candidate space, so per-step cost is one
+O(B·V) selection + an O(B·C) draw instead of an O(B·V log V) sort + an
+O(B·V) Gumbel pass.  ``top_k`` filtering is exact (``top_k`` ≤ cap is
+validated loudly); a ``top_p`` nucleus wider than the cap truncates at the
+cap — for a trained LM the mass beyond the top 128 logits is negligible,
+and the same trade is standard in TPU serving stacks.
+
+**Filtering semantics** (matched exactly by the numpy oracle in the
+tests): candidates are ranked by scaled logits ``z = logits /
+temperature`` descending, ties preferring the lower token id (``lax.top_k``
+order); candidate ``j`` survives iff ``j < top_k`` (``0`` = off) AND the
+cumulative full-softmax probability of candidates *before* it is
+``< top_p``.  The top candidate always survives.  Logprobs are reported
+from the *model's* distribution (log-softmax of the raw logits, before
+temperature/filtering), vLLM-style.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: hard cap on per-token alternative logprobs a request may ask for.  The
+#: sampler always computes this many (a fixed shape keeps the executable
+#: count at two — with/without logprobs — instead of one per requested n);
+#: the engine stores only what each request asked for.
+MAX_LOGPROBS = 8
+
+#: sampling-support cap: non-greedy draws consider the top this-many scaled
+#: logits (see "Bounded support" above).  ``top_k`` beyond it is rejected
+#: at validation instead of silently truncating.
+MAX_CANDIDATES = 128
+
+
+class TokenLogprobs(NamedTuple):
+    """Logprobs for one generated token: the chosen token's log-probability
+    under the model's (pre-temperature) distribution plus the top
+    alternatives, ids and logprobs sorted most-probable first."""
+    token: int
+    logprob: float
+    top_tokens: Tuple[int, ...]
+    top_logprobs: Tuple[float, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request generation control (frozen: share freely across requests).
+
+    ``temperature``: 0 = greedy argmax (bit-identical to the historical
+    engine); > 0 scales logits before sampling.
+    ``top_k``: keep only the k highest-probability tokens (0 = off; at
+    most :data:`MAX_CANDIDATES`).
+    ``top_p``: nucleus filtering — keep the minimal candidate set whose
+    cumulative probability reaches ``top_p`` (1.0 = off).
+    ``seed``: reproducibility seed; ``None`` derives a per-request seed
+    from the engine's ``sample_seed`` and the request uid.
+    ``stop_token_ids``: emitting any of these finishes the request
+    immediately (the stop token IS included in ``generated``); its pages
+    free and its slot refills mid-decode.
+    ``logprobs``: record this many alternative logprobs per generated token
+    (0 = off, max :data:`MAX_LOGPROBS`) on ``Request.logprobs``.
+    """
+    temperature: float = 1.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+    stop_token_ids: Tuple[int, ...] = ()
+    logprobs: int = 0
+
+    def __post_init__(self):
+        # accept any iterable of ints for stop ids; store a hashable tuple
+        object.__setattr__(self, "stop_token_ids",
+                           tuple(int(t) for t in self.stop_token_ids))
+
+    @classmethod
+    def greedy(cls, **kw) -> "SamplingParams":
+        """Deterministic argmax decoding (the engine default)."""
+        return cls(temperature=0.0, **kw)
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    def validate(self, vocab_size: int) -> None:
+        """Loud rejection of unservable parameters (called at submit)."""
+        if not np.isfinite(self.temperature) or self.temperature < 0.0:
+            raise ValueError(
+                f"temperature must be finite and >= 0 (0 = greedy), got "
+                f"{self.temperature}")
+        if not 0 <= self.top_k <= MAX_CANDIDATES:
+            raise ValueError(
+                f"top_k must be in [0, {MAX_CANDIDATES}] (0 = off; the "
+                f"fused sampler draws from a bounded candidate set, see "
+                f"sampling.MAX_CANDIDATES), got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1] (1 = off), got "
+                             f"{self.top_p}")
+        if self.seed is not None and not 0 <= self.seed < 2 ** 32:
+            raise ValueError(
+                f"seed must be in [0, 2**32) (PRNGKey folds in 32 bits; "
+                f"a wider seed would silently alias) or None, got "
+                f"{self.seed}")
+        if not 0 <= self.logprobs <= MAX_LOGPROBS:
+            raise ValueError(
+                f"logprobs must be in [0, {MAX_LOGPROBS}] (fixed sampler "
+                f"output shape; see sampling.MAX_LOGPROBS), got "
+                f"{self.logprobs}")
+        for t in self.stop_token_ids:
+            if not 0 <= t < vocab_size:
+                raise ValueError(
+                    f"stop token id {t} outside vocab [0, {vocab_size}) — "
+                    f"it could never be emitted, so the request would "
+                    f"silently lose its stop condition")
+
+
+def derive_seed(base_seed: int, uid: int) -> int:
+    """Stable per-request seed for requests that don't pin their own:
+    a splitmix-style mix of the engine seed and the request uid, so equal
+    uids reproduce across runs and distinct uids draw independently."""
+    x = (int(base_seed) * 0x9E3779B97F4A7C15 + int(uid) + 1) \
+        & 0xFFFFFFFFFFFFFFFF
+    x ^= x >> 30
+    x = (x * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    x ^= x >> 27
+    return int(x & 0x7FFFFFFF)
+
+
+def stack(entries: Sequence[Tuple[SamplingParams, int, int]]):
+    """Stack ``(params, effective_seed, counter)`` rows into the per-slot
+    device arrays :func:`sample_tokens` consumes.  Parameters become array
+    *data*, so any per-row mix shares one executable."""
+    n = len(entries)
+    temps = np.zeros((n,), np.float32)
+    top_ks = np.zeros((n,), np.int32)
+    top_ps = np.ones((n,), np.float32)
+    seeds = np.zeros((n,), np.uint32)
+    counters = np.zeros((n,), np.int32)
+    for j, (sp, seed, counter) in enumerate(entries):
+        temps[j] = sp.temperature
+        top_ks[j] = sp.top_k
+        top_ps[j] = sp.top_p
+        seeds[j] = np.uint32(seed & 0xFFFFFFFF)
+        counters[j] = counter
+    return temps, top_ks, top_ps, seeds, counters
+
+
+def _candidates(z, top_k, top_p):
+    """Candidate set of each row of scaled logits: ``(values, token_ids,
+    keep)`` over the top ``min(MAX_CANDIDATES, V)`` entries, descending,
+    ties preferring lower token ids.  ``keep[b, j]`` applies the row's
+    top-k (positional) and top-p (cumulative full-softmax mass of earlier
+    candidates) filters; the top candidate always survives."""
+    c = min(MAX_CANDIDATES, z.shape[-1])
+    cand, idx = jax.lax.top_k(z, c)
+    # candidate probabilities w.r.t. the FULL distribution (logsumexp runs
+    # over the whole vocab, so nucleus mass is exact within the cap)
+    denom = jax.nn.logsumexp(z, axis=-1, keepdims=True)
+    probs = jnp.exp(cand - denom)
+    mass_before = jnp.cumsum(probs, axis=-1) - probs   # exclusive prefix
+    k = jnp.clip(jnp.where(top_k > 0, top_k, c), 1, c)
+    pos = jnp.arange(c)[None, :]
+    keep = (pos < k[:, None]) & (mass_before < top_p[:, None])
+    return cand, idx, keep.at[:, 0].set(True)
+
+
+def support_mask(logits, temperature, top_k, top_p):
+    """(B, V) bool mask of each row's sampling support — the tokens a
+    non-greedy draw may return.  Test/debug surface over the exact
+    candidate logic the sampler uses."""
+    logits = jnp.asarray(logits, jnp.float32)
+    safe_t = jnp.where(temperature > 0.0, temperature, 1.0)
+    _, idx, keep = _candidates(logits / safe_t[:, None], top_k, top_p)
+    mask = jnp.zeros(logits.shape, bool)
+    rows = jnp.arange(logits.shape[0])[:, None]
+    return mask.at[rows, idx].set(keep)
+
+
+# trace counter: the no-per-request-recompile acceptance tests snapshot it
+# around mixed-parameter runs (the function body only executes at trace
+# time, so a cache hit leaves it untouched)
+_TRACES = 0
+
+
+def trace_count() -> int:
+    return _TRACES
+
+
+def _sample_impl(logits, temperature, top_k, top_p, seed, counter, *,
+                 want_logprobs: bool):
+    global _TRACES
+    _TRACES += 1
+    logits = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(logits, axis=-1)
+    safe_t = jnp.where(temperature > 0.0, temperature, 1.0)
+    cand, cand_idx, keep = _candidates(logits / safe_t[:, None],
+                                       top_k, top_p)
+    keys = jax.vmap(
+        lambda s, c: jax.random.fold_in(jax.random.PRNGKey(s), c))(
+        seed, counter)
+    # draw in candidate space (O(C) random bits per row, not O(V)), then
+    # map back to token ids
+    choice = jax.vmap(jax.random.categorical)(
+        keys, jnp.where(keep, cand, -jnp.inf))
+    sampled = jnp.take_along_axis(cand_idx, choice[:, None], axis=-1)[:, 0]
+    tokens = jnp.where(temperature > 0.0, sampled, greedy_tok)
+    if not want_logprobs:
+        return tokens, None, None, None
+    # temperature scaling is monotone, so the top-MAX_LOGPROBS candidates
+    # by scaled score ARE the top raw-logit tokens: report their model
+    # (pre-temperature) logprobs without another selection pass
+    n_top = min(MAX_LOGPROBS, logits.shape[-1])
+    denom_raw = jax.nn.logsumexp(logits, axis=-1, keepdims=True)
+    top_ids = cand_idx[:, :n_top]
+    top_lps = jnp.take_along_axis(logits, top_ids, axis=-1) - denom_raw
+    chosen = jnp.take_along_axis(logits, tokens[:, None], axis=-1)[:, 0] \
+        - denom_raw[:, 0]
+    return tokens, chosen, top_ids, top_lps
+
+
+#: the fused batched sampler: ``(B, V)`` logits + per-row parameter arrays
+#: -> next token per row (+ logprobs under the static ``want_logprobs``
+#: flag: two executables total per shape, never one per parameter mix)
+sample_tokens = jax.jit(_sample_impl, static_argnames=("want_logprobs",))

@@ -106,12 +106,14 @@ class StreamScheduler:
         """Engine steps this request can still wait and make its deadline:
         ``(arrival + deadline) - step - remaining_work``.  Remaining work is
         one step per token left to generate (prefill rides the admission
-        step).  Infinite for requests without a deadline."""
+        step) — an upper bound: a ``stop_token_ids`` hit finishes sooner,
+        which only ever improves true slack, so early-finishing requests
+        are never preempted for on behalf of a request that didn't need it.
+        Infinite for requests without a deadline."""
         if request.deadline_steps is None:
             return math.inf
-        remaining = max(request.max_new_tokens - len(request.generated), 0)
         return (request.arrival_step + request.deadline_steps) \
-            - step - remaining
+            - step - request.remaining_tokens
 
     def at_risk(self, request: "Request", step: int) -> bool:
         return self.slack(request, step) <= self.risk_margin

@@ -1,0 +1,429 @@
+"""Per-request SamplingParams + the fused on-device batched sampler:
+filter semantics vs a numpy oracle, greedy bit-identity vs the
+pre-redesign host argmax loop, counter-based RNG reproducibility across
+preemption and admission order, stop-token early finish (pages freed,
+slot refilled mid-decode), loud validation (duplicate uids, bad stop
+ids), the deprecation shim, and the no-per-request-recompile pin."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.serve import (MAX_LOGPROBS, Request, SamplingParams, ServeEngine,
+                         sampling as sampling_lib)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompt(uid, n=6):
+    return (np.arange(n, dtype=np.int32) * 3 + 7 * uid + 1) % 1024
+
+
+# -- filter semantics vs numpy oracle ----------------------------------------
+
+def _oracle_masks(z, top_k, top_p, tol=1e-4):
+    """(conservative, liberal) float64 support masks bracketing the
+    device's float32 cumsum at the nucleus boundary; mirrors the sampler's
+    capped-candidate semantics — descending stable order (ties prefer the
+    lower id, like lax.top_k), positional top-k, exclusive cumulative
+    full-softmax mass vs top_p, top candidate always kept."""
+    z = np.asarray(z, np.float64)
+    v = z.shape[-1]
+    c = min(sampling_lib.MAX_CANDIDATES, v)
+    order = np.argsort(-z, kind="stable")[:c]
+    e = np.exp(z - z.max())
+    probs = e / e.sum()
+    cp = probs[order]
+    mass_before = np.cumsum(cp) - cp
+    k = min(max(top_k if top_k > 0 else c, 1), c)
+    masks = []
+    for p_eff in (top_p - tol, top_p + tol):
+        keep = (np.arange(c) < k) & (mass_before < p_eff)
+        keep[0] = True
+        m = np.zeros(v, bool)
+        m[order[keep]] = True
+        masks.append(m)
+    return masks
+
+
+def _dev_mask(z, top_k, top_p):
+    return np.asarray(sampling_lib.support_mask(
+        z[None].astype(np.float32), np.ones((1,), np.float32),
+        np.asarray([top_k], np.int32), np.asarray([top_p], np.float32)))[0]
+
+
+def _check_filter_row(z, top_k, top_p):
+    dev_keep = _dev_mask(z, top_k, top_p)
+    lo, hi = _oracle_masks(z, top_k, top_p)
+    assert np.all(~lo | dev_keep), (z, top_k, top_p, "dropped a token the "
+                                    "oracle keeps conservatively")
+    assert np.all(~dev_keep | hi), (z, top_k, top_p, "kept a token the "
+                                    "oracle rejects liberally")
+    # the argmax always survives; positional top-k never over-keeps
+    assert dev_keep[int(z.argmax())]
+    if top_k > 0:
+        assert dev_keep.sum() <= top_k
+
+
+def test_filter_matches_numpy_oracle_seeded():
+    rng = np.random.default_rng(0)
+    for _ in range(60):
+        v = int(rng.integers(4, 300))
+        z = rng.normal(0, 4, size=v).astype(np.float32)
+        _check_filter_row(z, int(rng.integers(0, min(v, 128) + 1)),
+                          float(rng.uniform(0.05, 1.0)))
+    # exact degenerate corners: top_k=1 keeps exactly the argmax, and a
+    # tie at the boundary resolves to the LOWER token id (lax.top_k order)
+    assert _dev_mask(np.array([3.0, 1.0, 2.0, -1.0], np.float32),
+                     1, 1.0).tolist() == [True, False, False, False]
+    assert _dev_mask(np.array([5.0, 5.0, 1.0], np.float32),
+                     1, 1.0).tolist() == [True, False, False]
+    # the candidate cap bounds the support even with filters off
+    wide = np.zeros(sampling_lib.MAX_CANDIDATES + 64, np.float32)
+    assert _dev_mask(wide, 0, 1.0).sum() == sampling_lib.MAX_CANDIDATES
+
+
+def test_filter_matches_numpy_oracle_hypothesis():
+    hypothesis = pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (requirements-dev)")
+    import hypothesis.strategies as st
+
+    @hypothesis.given(
+        st.integers(0, 10**6), st.integers(4, 200),
+        st.integers(0, 128), st.floats(0.05, 1.0))
+    @hypothesis.settings(max_examples=60, deadline=None)
+    def prop(seed, v, top_k, top_p):
+        z = np.random.default_rng(seed).normal(0, 5, size=v)
+        _check_filter_row(z.astype(np.float32), min(top_k, v), top_p)
+
+    prop()
+
+
+def test_sampled_tokens_stay_in_filter_support():
+    rng = np.random.default_rng(3)
+    b, v = 8, 40
+    logits = rng.normal(0, 3, size=(b, v)).astype(np.float32)
+    temps = rng.uniform(0.2, 1.5, size=b).astype(np.float32)
+    temps[:2] = 0.0                                   # greedy rows mix in
+    ks = rng.integers(0, v, size=b).astype(np.int32)
+    ps = rng.uniform(0.2, 1.0, size=b).astype(np.float32)
+    seeds = rng.integers(0, 2**31, size=b).astype(np.uint32)
+    counters = rng.integers(0, 64, size=b).astype(np.int32)
+    toks, _, _, _ = sampling_lib.sample_tokens(
+        logits, temps, ks, ps, seeds, counters, want_logprobs=False)
+    toks = np.asarray(toks)
+    # greedy rows are EXACTLY the numpy argmax
+    np.testing.assert_array_equal(toks[:2], logits[:2].argmax(-1))
+    for j in range(2, b):
+        _, hi = _oracle_masks(logits[j] / temps[j], int(ks[j]), float(ps[j]))
+        assert hi[toks[j]], f"row {j} sampled outside its filter support"
+    # counter-based draws are a pure function of (seed, counter)
+    again, _, _, _ = sampling_lib.sample_tokens(
+        logits, temps, ks, ps, seeds, counters, want_logprobs=False)
+    np.testing.assert_array_equal(toks, np.asarray(again))
+
+
+# -- greedy bit-identity vs the pre-redesign engine --------------------------
+
+def _host_argmax_sampler(logits, temps, ks, ps, seeds, counters, *,
+                         want_logprobs):
+    """The pre-redesign sampler, verbatim: transfer the logits rows to the
+    host, np.argmax each row."""
+    rows = np.asarray(logits)
+    return (np.array([int(r.argmax()) for r in rows], np.int64),
+            None, None, None)
+
+
+def test_greedy_token_identity_vs_pre_redesign_pin(setup):
+    """The fused on-device greedy path must be bit-identical to the
+    historical host-side ``np.argmax`` loop on a mixed-length multi-slot
+    workload (paged mode, mid-decode refills included)."""
+    cfg, params = setup
+
+    def build():
+        return [Request(uid=u, prompt=_prompt(u, 4 + (u * 3) % 9) %
+                        cfg.vocab_size, max_new_tokens=3 + u % 4)
+                for u in range(5)]
+
+    new = ServeEngine(params, cfg, max_len=48, slots=2)
+    got_new = {r.uid: r.generated for r in new.run(build(), max_steps=128)}
+
+    old = ServeEngine(params, cfg, max_len=48, slots=2)
+    old._sample_fn = _host_argmax_sampler
+    got_old = {r.uid: r.generated for r in old.run(build(), max_steps=128)}
+    assert got_new == got_old, "device greedy diverged from host argmax"
+
+
+# -- reproducibility: seeds survive preemption + admission order -------------
+
+def _sampled_pressure_workload(cfg):
+    """The streaming pressure trace with per-request seeded sampling: the
+    big low-priority request is preempted by deadlined smalls."""
+    big = Request(uid=0, prompt=(np.arange(24, dtype=np.int32) * 3 + 1)
+                  % cfg.vocab_size, max_new_tokens=20, priority=0,
+                  sampling=SamplingParams(temperature=0.9, top_k=64,
+                                          top_p=0.95, seed=1000))
+    smalls = [Request(uid=1 + i,
+                      prompt=(np.arange(6, dtype=np.int32) + 11 * i)
+                      % cfg.vocab_size,
+                      max_new_tokens=4, priority=1, deadline_steps=12,
+                      sampling=SamplingParams(temperature=0.9, top_k=64,
+                                              top_p=0.95, seed=2000 + i))
+              for i in range(4)]
+    return [(1, big)] + [(3 + 2 * i, r) for i, r in enumerate(smalls)]
+
+
+def _tight_engine(params, cfg):
+    return ServeEngine(params, cfg, max_len=56, slots=2, cache_mode="paged",
+                       page_size=8, num_pages=7)
+
+
+def test_sampled_reproducibility_under_preemption(setup):
+    """Same (seed, prompt) yields identical SAMPLED tokens with and without
+    forced preemption — the counter-based RNG guarantee a shared host
+    generator cannot give (any schedule change permutes its draw order)."""
+    cfg, params = setup
+    slo = _tight_engine(params, cfg)
+    done_p = slo.run_stream(_sampled_pressure_workload(cfg), max_steps=256)
+    assert all(r.done for r in done_p)
+    assert slo.last_run_preemptions >= 1, "workload lost its pressure"
+
+    fifo = _tight_engine(params, cfg)
+    done_f = fifo.run_stream(_sampled_pressure_workload(cfg), max_steps=256,
+                             lookahead=0, preempt=False)
+    assert fifo.last_run_preemptions == 0
+    assert {r.uid: r.generated for r in done_p} == \
+        {r.uid: r.generated for r in done_f}, (
+        "suspend/resume shifted sampled draws")
+
+
+def test_sampled_reproducibility_under_shuffled_admission(setup):
+    """Submission order changes co-batching and slot assignment but not any
+    request's sampled tokens (draws are (seed, position)-pure); two
+    requests sharing (seed, prompt, params) emit identical tokens."""
+    cfg, params = setup
+
+    def build(order):
+        reqs = [Request(uid=u, prompt=_prompt(u) % cfg.vocab_size,
+                        max_new_tokens=5,
+                        sampling=SamplingParams(temperature=0.8, top_k=32,
+                                                seed=500 + u))
+                for u in range(5)]
+        # twin of uid 0: same seed+prompt+params, distinct uid
+        reqs.append(Request(uid=99, prompt=_prompt(0) % cfg.vocab_size,
+                            max_new_tokens=5,
+                            sampling=SamplingParams(temperature=0.8,
+                                                    top_k=32, seed=500)))
+        return [reqs[i] for i in order]
+
+    fwd = ServeEngine(params, cfg, max_len=48, slots=2)
+    got = {r.uid: r.generated for r in fwd.run(build(range(6)),
+                                               max_steps=128)}
+    rev = ServeEngine(params, cfg, max_len=48, slots=2)
+    got_r = {r.uid: r.generated
+             for r in rev.run(build([3, 5, 1, 4, 0, 2]), max_steps=128)}
+    assert got == got_r, "admission order changed sampled tokens"
+    assert got[0] == got[99], "same (seed, prompt) must draw identically"
+
+
+# -- stop tokens -------------------------------------------------------------
+
+def test_stop_token_finishes_early_frees_pages_and_refills(setup):
+    """A stop-token hit finishes the request immediately (the stop id is
+    the last generated token), frees its pages, and its slot refills
+    mid-decode; a stop id sampled as the prefill's FIRST token finishes at
+    admission without ever decoding."""
+    cfg, params = setup
+    prompts = {u: _prompt(u, 5 + u) % cfg.vocab_size for u in range(4)}
+    probe = ServeEngine(params, cfg, max_len=48, slots=2)
+    ref = {r.uid: list(r.generated) for r in probe.run(
+        [Request(uid=u, prompt=prompts[u].copy(), max_new_tokens=10)
+         for u in range(4)], max_steps=128)}
+
+    # stop at the first token that hasn't occurred earlier in the greedy
+    # output (a repeated token would legitimately stop sooner)
+    stop_at = {u: next(k for k in range(1, 10)
+                       if ref[u][k] not in ref[u][:k]) for u in range(4)}
+    eng = ServeEngine(params, cfg, max_len=48, slots=2, page_size=8)
+    reqs = [Request(uid=u, prompt=prompts[u].copy(), max_new_tokens=10,
+                    sampling=SamplingParams.greedy(
+                        stop_token_ids=(ref[u][stop_at[u]],)))
+            for u in range(4)]
+    done = eng.run(reqs, max_steps=128)
+    by_uid = {r.uid: r for r in done}
+    for u in range(4):
+        r = by_uid[u]
+        assert r.done and r.finish_reason == "stop"
+        assert r.generated == ref[u][:stop_at[u] + 1], (
+            "stop must truncate exactly at the stop id")
+        assert len(r.generated) < r.max_new_tokens
+    assert eng.kv.pages_in_use() == 0, "early finishes leaked pages"
+    # stop-freed slots refilled mid-run, and the whole schedule is shorter
+    # than the no-stop reference run of the same workload
+    assert any(ev[0] > 1 and ev[3] for ev in eng.admission_log), \
+        eng.admission_log
+    assert eng.last_run_steps < probe.last_run_steps, (
+        "early stop did not shorten the schedule")
+
+    # first-token stop: finishes at admission, before any decode
+    first = ServeEngine(params, cfg, max_len=48, slots=1)
+    r0 = Request(uid=0, prompt=prompts[0].copy(), max_new_tokens=10,
+                 sampling=SamplingParams.greedy(stop_token_ids=(ref[0][0],)))
+    out = first.run([r0], max_steps=32)[0]
+    assert out.done and out.finish_reason == "stop"
+    assert out.generated == ref[0][:1]
+    assert out.finish_step == out.admit_step
+
+
+def test_max_new_tokens_one_finishes_at_admission(setup):
+    """A 1-token budget completes with exactly one (prefill-sampled) token
+    instead of riding a decode step to two."""
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_len=32, slots=1)
+    out = eng.run([Request(uid=0, prompt=_prompt(0) % cfg.vocab_size,
+                           max_new_tokens=1)], max_steps=16)[0]
+    assert out.done and out.finish_reason == "length"
+    assert len(out.generated) == 1
+
+
+# -- logprobs ----------------------------------------------------------------
+
+def test_logprobs_land_on_request(setup):
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_len=48, slots=2)
+    reqs = [Request(uid=0, prompt=_prompt(0) % cfg.vocab_size,
+                    max_new_tokens=4,
+                    sampling=SamplingParams.greedy(logprobs=3)),
+            Request(uid=1, prompt=_prompt(1) % cfg.vocab_size,
+                    max_new_tokens=4)]          # no logprobs requested
+    done = {r.uid: r for r in eng.run(reqs, max_steps=64)}
+    assert done[1].logprobs == []
+    lp = done[0].logprobs
+    assert len(lp) == len(done[0].generated)
+    for entry, tok in zip(lp, done[0].generated):
+        assert entry.token == tok
+        assert len(entry.top_tokens) == len(entry.top_logprobs) == 3
+        # greedy chosen token IS the most probable alternative
+        assert entry.top_tokens[0] == tok
+        assert entry.logprob == pytest.approx(entry.top_logprobs[0])
+        assert all(a >= b for a, b in zip(entry.top_logprobs,
+                                          entry.top_logprobs[1:]))
+        assert entry.logprob <= 0.0
+
+
+# -- one executable for any parameter mix ------------------------------------
+
+def test_mixed_params_share_one_executable(setup):
+    """The acceptance pin: after a warm-up run, a second run with every
+    request's temperature/top_k/top_p/seed/stop ids CHANGED triggers zero
+    new sampler traces — parameters are data, not trace constants."""
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_len=48, slots=2)
+
+    def build(variant):
+        specs = [(0.0, 0, 1.0, None, ()), (0.7, 16, 0.9, 5, ()),
+                 (1.1, 0, 0.8, 6, (3,)), (0.9, 8, 1.0, 7, (4, 5))] \
+            if variant == 0 else \
+                [(0.8, 32, 0.95, 50, (9,)), (0.0, 0, 1.0, None, ()),
+                 (1.3, 4, 0.7, 60, ()), (0.5, 0, 0.99, 70, (1, 2))]
+        return [Request(uid=u, prompt=_prompt(u) % cfg.vocab_size,
+                        max_new_tokens=4,
+                        sampling=SamplingParams(
+                            temperature=t, top_k=k, top_p=p, seed=s,
+                            stop_token_ids=stop))
+                for u, (t, k, p, s, stop) in enumerate(specs)]
+
+    done = eng.run(build(0), max_steps=64)
+    assert all(r.done for r in done)
+    before = sampling_lib.trace_count()
+    done2 = eng.run(build(1), max_steps=64)
+    assert all(r.done for r in done2)
+    assert sampling_lib.trace_count() == before, (
+        "changing per-request sampling parameters recompiled the sampler")
+
+
+# -- loud validation ---------------------------------------------------------
+
+def test_sampling_params_validation(setup):
+    cfg, params = setup
+    for bad in (dict(temperature=-0.5), dict(temperature=float("nan")),
+                dict(top_k=-1),
+                dict(top_k=sampling_lib.MAX_CANDIDATES + 1),
+                dict(top_p=0.0), dict(top_p=1.5),
+                dict(seed=-1), dict(seed=2 ** 32),
+                dict(logprobs=MAX_LOGPROBS + 1), dict(logprobs=-1)):
+        with pytest.raises(ValueError):
+            SamplingParams(**bad).validate(cfg.vocab_size)
+    eng = ServeEngine(params, cfg, max_len=32, slots=1)
+    with pytest.raises(ValueError, match="stop token id"):
+        eng.submit(Request(uid=0, prompt=_prompt(0) % cfg.vocab_size,
+                           sampling=SamplingParams(
+                               stop_token_ids=(cfg.vocab_size,))))
+    assert not eng.scheduler.has_work(), "rejected request was enqueued"
+
+
+def test_duplicate_uids_raise(setup):
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_len=32, slots=1)
+    eng.submit(Request(uid=7, prompt=_prompt(0) % cfg.vocab_size,
+                       max_new_tokens=2))
+    with pytest.raises(ValueError, match="already queued"):
+        eng.submit(Request(uid=7, prompt=_prompt(1) % cfg.vocab_size,
+                           max_new_tokens=2))
+    assert len(eng.scheduler) == 1
+    eng.run_stream(max_steps=32)        # drain; uid 7 leaves flight
+    # a finished uid is reusable
+    eng.submit(Request(uid=7, prompt=_prompt(0) % cfg.vocab_size,
+                       max_new_tokens=2))
+    eng.run_stream(max_steps=32)
+
+    # run(): batch-internal duplicates rejected all-or-nothing
+    dup = [Request(uid=1, prompt=_prompt(0) % cfg.vocab_size,
+                   max_new_tokens=2),
+           Request(uid=1, prompt=_prompt(1) % cfg.vocab_size,
+                   max_new_tokens=2)]
+    with pytest.raises(ValueError, match="duplicate request uid"):
+        eng.run(dup)
+    assert not eng.scheduler.has_work(), "rejected batch left a request"
+
+    # run_stream(): trace-internal duplicates rejected up front
+    with pytest.raises(ValueError, match="duplicate request uid"):
+        eng.run_stream([(0, r) for r in dup], max_steps=8)
+
+
+# -- deprecation shim --------------------------------------------------------
+
+def test_engine_greedy_temperature_shim(setup):
+    cfg, params = setup
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        clean = ServeEngine(params, cfg, max_len=32, slots=1)
+    assert clean.default_sampling.is_greedy
+
+    with pytest.warns(DeprecationWarning, match="per-request"):
+        legacy = ServeEngine(params, cfg, max_len=32, slots=1,
+                             greedy=False, temperature=0.7)
+    assert legacy.default_sampling == SamplingParams(temperature=0.7)
+    with pytest.warns(DeprecationWarning):
+        g = ServeEngine(params, cfg, max_len=32, slots=1, greedy=True,
+                        temperature=0.7)
+    assert g.default_sampling.is_greedy    # greedy wins over temperature
+
+    with pytest.raises(ValueError, match="not both"), \
+            pytest.warns(DeprecationWarning):
+        ServeEngine(params, cfg, max_len=32, slots=1, greedy=True,
+                    sampling=SamplingParams())
+
+    # the shimmed engine really serves the default it built
+    out = legacy.run([Request(uid=0, prompt=_prompt(0) % cfg.vocab_size,
+                              max_new_tokens=3)], max_steps=32)
+    assert len(out[0].generated) == 3

@@ -49,6 +49,8 @@ def test_engine_generates(setup):
     for r in done:
         assert len(r.generated) >= 5
         assert all(0 <= t < cfg.vocab_size for t in r.generated)
+        # no stop ids on these requests: budget exhaustion is the reason
+        assert r.done and r.finish_reason == "length"
 
 
 def test_engine_named_adapters(setup):
