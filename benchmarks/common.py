@@ -1,10 +1,20 @@
-"""Shared benchmark helpers."""
+"""Shared benchmark helpers.
+
+Result emission goes through a :mod:`repro.obs` tracker: every
+:func:`csv_row` is one ``bench_row`` event (plus a ``bench/<name>`` gauge)
+on the module :data:`TRACKER` — an ``InMemoryTracker`` by default, which
+``run.py`` wraps in a ``CompositeTracker`` with a ``JsonlTracker`` when
+``--metrics`` asks for the line-delimited artifact CI uploads.  The
+historical ``--json`` summary is derived from the same event stream
+(:func:`results`), so both artifacts always agree.
+"""
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import PEFTConfig
+from repro.obs import CompositeTracker, InMemoryTracker, Tracker
 
 # paper model geometries
 DEBERTA = dict(d_model=768, d_ff=3072, num_layers=12)      # DeBERTaV3-base
@@ -49,11 +59,32 @@ def timeit(fn, *args, iters=5, warmup=2):
     return (time.perf_counter() - t0) / iters
 
 
-#: every csv_row of the process, for the --json artifact (CI uploads it)
-RESULTS = []
+#: the process-wide benchmark metrics sink.  The in-memory capture always
+#: runs (it backs :func:`results`); :func:`add_tracker` composes more
+#: backends on top (run.py adds the jsonl artifact writer).
+CAPTURE = InMemoryTracker()
+TRACKER: Tracker = CAPTURE
+
+
+def add_tracker(tracker: Tracker) -> None:
+    """Tee every subsequent csv_row into ``tracker`` as well."""
+    global TRACKER
+    TRACKER = CompositeTracker(TRACKER, tracker)
 
 
 def csv_row(name, us_per_call, derived=""):
-    RESULTS.append({"name": name, "us_per_call": round(float(us_per_call), 1),
-                    "derived": str(derived)})
+    # payload key is "bench", not "name": InMemoryTracker flattens event
+    # payloads over {"step", "name"}, so a payload "name" would shadow the
+    # event name and break events_named() lookups
+    row = {"bench": name, "us_per_call": round(float(us_per_call), 1),
+           "derived": str(derived)}
+    TRACKER.event("bench_row", row)
+    TRACKER.gauge(f"bench/{name}", row["us_per_call"])
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def results():
+    """All csv_row payloads so far (the --json summary artifact)."""
+    return [{"name": e["bench"], "us_per_call": e["us_per_call"],
+             "derived": e["derived"]}
+            for e in CAPTURE.events_named("bench_row")]

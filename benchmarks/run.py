@@ -17,8 +17,10 @@
 ``--quick`` runs the CI smoke subset (CPU): the dispatch hot path — so
 PEFT-registry regressions are visible on every push — the closed-form Table 8
 parameter anchors, and the mixed-vs-homogeneous serving throughput guardrail.
-``--json PATH`` additionally writes every result row as JSON (CI uploads the
-quick-bench JSON as a build artifact).
+``--json PATH`` additionally writes every result row as JSON, and
+``--metrics PATH`` streams the same rows through a ``repro.obs``
+``JsonlTracker`` (append-only line-delimited events, stable schema) — CI
+uploads both as build artifacts, derived from one tracker stream.
 """
 import json
 import os
@@ -31,13 +33,19 @@ if _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
 
 
-def main(quick: bool = False, json_path: str = "") -> None:
+def main(quick: bool = False, json_path: str = "",
+         metrics_path: str = "") -> None:
     from benchmarks import (bench_activation_memory, bench_convergence,
                             bench_dispatch, bench_geometry, bench_kernels,
                             bench_neumann, bench_paged_kv, bench_params,
                             bench_sampling, bench_serve, bench_speed,
                             bench_streaming)
     from benchmarks import common
+    from repro.obs import JsonlTracker
+    jsonl = None
+    if metrics_path:
+        jsonl = JsonlTracker(metrics_path)
+        common.add_tracker(jsonl)
     if quick:
         mods = [(bench_params, {}), (bench_dispatch, {"quick": True}),
                 (bench_serve, {"quick": True}),
@@ -60,26 +68,31 @@ def main(quick: bool = False, json_path: str = "") -> None:
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             failed.append(name)
+    rows = common.results()
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"quick": quick, "failed": failed,
-                       "results": common.RESULTS}, f, indent=2)
-        print(f"\nwrote {len(common.RESULTS)} rows to {json_path}")
+                       "results": rows}, f, indent=2)
+        print(f"\nwrote {len(rows)} rows to {json_path}")
+    if jsonl is not None:
+        jsonl.finish()
+        print(f"wrote tracker metrics to {metrics_path}")
     if failed:
         print(f"\nFAILED: {failed}")
         sys.exit(1)
     print("\nall benchmarks passed" + (" (quick subset)" if quick else ""))
 
 
-def _parse_json_path(argv):
-    if "--json" in argv:
-        i = argv.index("--json")
+def _parse_path(argv, flag):
+    if flag in argv:
+        i = argv.index(flag)
         if i + 1 >= len(argv):
-            raise SystemExit("--json requires a path argument")
+            raise SystemExit(f"{flag} requires a path argument")
         return argv[i + 1]
     return ""
 
 
 if __name__ == '__main__':
     main(quick="--quick" in sys.argv[1:],
-         json_path=_parse_json_path(sys.argv[1:]))
+         json_path=_parse_path(sys.argv[1:], "--json"),
+         metrics_path=_parse_path(sys.argv[1:], "--metrics"))

@@ -20,6 +20,7 @@ import numpy as np
 from repro.configs import TrainConfig, get_config
 from repro.data import DataConfig, SyntheticLMDataset, prefetch_iterator
 from repro.launch.mesh import make_local_mesh, rules_for
+from repro.obs import NOOP, JsonlTracker
 from repro.sharding import mesh_context, named_sharding
 from repro.train import checkpoint, straggler, trainer
 
@@ -45,7 +46,12 @@ def main(argv=None):
                     help="use the smoke-test-sized config of the family")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-jsonl", default="",
+                    help="write per-step metrics (loss/grad_norm/lr/step "
+                         "time) as a repro.obs JsonlTracker artifact")
     args = ap.parse_args(argv)
+    tracker = (JsonlTracker(args.metrics_jsonl) if args.metrics_jsonl
+               else NOOP)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -100,6 +106,9 @@ def main(argv=None):
                 state, metrics = step_fn(state, batch)
                 jax.block_until_ready(metrics["loss"])
             mon.record(sw.seconds)
+            if tracker is not NOOP:
+                trainer.log_step_metrics(tracker, i + 1, metrics,
+                                         step_time=sw.seconds)
             if (i + 1) % args.log_every == 0 or i == start:
                 print(f"step {i+1:5d}  loss {float(metrics['loss']):.4f}  "
                       f"gnorm {float(metrics['grad_norm']):.3f}  "
@@ -108,6 +117,7 @@ def main(argv=None):
                 checkpoint.save(state, args.ckpt, i + 1, async_save=True)
         if args.ckpt:
             checkpoint.save(state, args.ckpt, args.steps)
+        tracker.finish()
         dt = time.time() - t_start
         print(f"done: {args.steps - start} steps in {dt:.1f}s "
               f"({(args.steps - start)/max(dt,1e-9):.2f} steps/s); "

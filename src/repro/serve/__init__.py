@@ -1,4 +1,5 @@
-from repro.serve.engine import BASE_ADAPTER, Request, ServeEngine  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    BASE_ADAPTER, AdmissionEvent, PreemptionEvent, Request, ServeEngine)
 from repro.serve.kv_cache import (  # noqa: F401
     OutOfPages, PagedKVCache, TRASH_PAGE)
 from repro.serve.sampling import (  # noqa: F401

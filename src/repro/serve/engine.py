@@ -66,6 +66,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, PEFTConfig
 from repro.core import peft as peft_lib, registry as peft_registry
 from repro.models import model as model_lib
+from repro.obs import NOOP, NULL_SPAN, Tracker
 from repro.serve import sampling as sampling_lib
 from repro.serve.kv_cache import OutOfPages, PagedKVCache, TRASH_PAGE
 from repro.serve.sampling import SamplingParams, TokenLogprobs
@@ -149,6 +150,36 @@ class Request:
         return max(self.max_new_tokens - len(self.generated), 0)
 
 
+@dataclasses.dataclass(frozen=True)
+class AdmissionEvent:
+    """One slot fill (fresh or resumed), the structured successor of the
+    historical ``(step, slot, uid, others)`` tuples: non-empty ``others``
+    prove the slot was refilled while the rest of the batch was
+    mid-decode, ``prefix_tokens`` is how much resident KV the prefill
+    skipped (shared-prefix alias or a resumed request's retained pages)."""
+    step: int
+    slot: int
+    uid: int
+    adapter: str
+    resumed: bool
+    prefix_tokens: int
+    queueing_delay: Optional[int]
+    others: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptionEvent:
+    """One suspension (the preemption audit trail): ``resident_tokens`` is
+    the KV the slot had computed when it yielded — what resume re-aliases
+    if retention keeps it resident."""
+    step: int
+    slot: int
+    uid: int
+    adapter: str
+    priority: int
+    resident_tokens: int
+
+
 class ServeEngine:
     """Fixed-slot continuous batcher over decode_step.
 
@@ -176,7 +207,8 @@ class ServeEngine:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  retain_prefix_cache: bool = True,
                  temperature=_LEGACY_UNSET, sample_seed: int = 0,
-                 sampling: Optional[SamplingParams] = None):
+                 sampling: Optional[SamplingParams] = None,
+                 tracker: Optional[Tracker] = None):
         # serving config: every linear is a plain {"w"} (+bank) after merging
         self.cfg = dataclasses.replace(
             cfg, peft=PEFTConfig(method="none", target_modules=(),
@@ -266,12 +298,12 @@ class ServeEngine:
         self.cache = None           # dense-mode cache tree
         self.positions = np.zeros((slots,), np.int32)
         self.active: List[Optional[Request]] = [None] * slots
-        #: (step, slot, uid, live uids in OTHER slots at admission time) —
-        #: observability hook: non-empty other-lives prove a freed slot was
-        #: refilled while the rest of the batch was mid-decode
-        self.admission_log: List[Tuple[int, int, int, List[int]]] = []
-        #: (step, slot, uid) per suspension — the preemption audit trail
-        self.preemption_log: List[Tuple[int, int, int]] = []
+        #: structured admission audit trail, one :class:`AdmissionEvent`
+        #: per slot fill (the deprecated tuple views ``admission_log`` /
+        #: ``preemption_log`` are property shims over these)
+        self.admission_events: List[AdmissionEvent] = []
+        #: structured preemption audit trail (:class:`PreemptionEvent`)
+        self.preemption_events: List[PreemptionEvent] = []
         #: streaming admission policy; run() pins it to strict FIFO,
         #: run_stream() reconfigures it per call
         self.scheduler = StreamScheduler()
@@ -285,9 +317,17 @@ class ServeEngine:
         #: positions vector of the last decode step (dead rows pinned to 0)
         self.last_decode_positions: Optional[np.ndarray] = None
         # once-per-engine warning dedup (bank rebuilds / repeated runs would
-        # otherwise re-fire identical warnings)
+        # otherwise re-fire identical warnings; the tracker still COUNTS
+        # every suppressed occurrence, see engine/warnings/*)
         self._warned_dense_fallback = False
         self._warned_truncation = False
+        #: cumulative engine steps ever served — the tracker's step domain
+        #: (``self._step`` resets per run; tracker steps must be monotone)
+        self._obs_step = 0
+        self._tracker = NOOP
+        self._obs = False
+        if tracker is not None:
+            self.tracker = tracker
 
     # -- adapters ----------------------------------------------------------
     @property
@@ -305,6 +345,65 @@ class ServeEngine:
     def temperature(self) -> float:
         """Engine-default sampling temperature (historical attribute)."""
         return self.default_sampling.temperature
+
+    # -- observability -----------------------------------------------------
+    @property
+    def tracker(self) -> Tracker:
+        """The metrics backend (:mod:`repro.obs`) every serving layer
+        reports through; shared with the scheduler and the KV cache."""
+        return self._tracker
+
+    @tracker.setter
+    def tracker(self, t: Tracker) -> None:
+        # swapping the backend never recompiles anything: instrumentation
+        # is pure host-side bookkeeping outside every jitted function
+        # (pinned by the trace-count test in tests/test_obs.py)
+        self._tracker = t
+        self._obs = not t.is_noop
+        self.scheduler.tracker = t
+        if self.kv is not None:
+            self.kv.set_tracker(t)
+
+    @property
+    def admission_log(self) -> List[Tuple[int, int, int, List[int]]]:
+        """DEPRECATED tuple view of :attr:`admission_events`."""
+        warnings.warn(
+            "ServeEngine.admission_log is deprecated: read the structured "
+            "ServeEngine.admission_events (or subscribe a repro.obs tracker "
+            "to the 'engine/admission' event stream)",
+            DeprecationWarning, stacklevel=2)
+        return [(e.step, e.slot, e.uid, list(e.others))
+                for e in self.admission_events]
+
+    @property
+    def preemption_log(self) -> List[Tuple[int, int, int]]:
+        """DEPRECATED tuple view of :attr:`preemption_events`."""
+        warnings.warn(
+            "ServeEngine.preemption_log is deprecated: read the structured "
+            "ServeEngine.preemption_events (or subscribe a repro.obs "
+            "tracker to the 'engine/preemption' event stream)",
+            DeprecationWarning, stacklevel=2)
+        return [(e.step, e.slot, e.uid) for e in self.preemption_events]
+
+    def _observe_decode(self, live: List[int]) -> None:
+        """Per-decode-step metrics, computed from already-host-resident
+        values only (slot bookkeeping — never from device buffers, so the
+        step loop gains no device->host syncs).  The caller gates this
+        behind ``self._obs``: with the default :class:`NoopTracker` the
+        decode loop does no metric work at all (<2% throughput guard in
+        ``benchmarks/bench_serve.py``)."""
+        tr = self._tracker
+        s = self._obs_step
+        tr.gauge("engine/live_slots", len(live), step=s)
+        tr.gauge("scheduler/queue_depth", len(self.scheduler), step=s)
+        by_adapter: Dict[str, int] = {}
+        for i in live:
+            a = self.active[i].adapter
+            by_adapter[a] = by_adapter.get(a, 0) + 1
+        for a, n in by_adapter.items():
+            tr.count(f"engine/tokens/{a}", n, step=s)
+        if self.kv is not None:
+            self.kv.observe_pool(step=s)
 
     def register_adapter(self, name: str, params,
                          peft_cfg: Optional[PEFTConfig] = None) -> None:
@@ -395,6 +494,11 @@ class ServeEngine:
 
         raws = [raw for raw, _ in entries]
         self._serve_tree = rec(base, raws, ())
+        if kind_counts["delta"]:
+            # count EVERY occurrence (the user-facing warning below dedups
+            # to once per engine; suppressed repeats stay observable)
+            self._tracker.count("engine/warnings/dense_fallback",
+                                kind_counts["delta"], step=self._obs_step)
         if kind_counts["delta"] and not self._warned_dense_fallback:
             # always exact, but N·d_in·d_out fp32 per linear — make the
             # memory cliff visible instead of silently eating it (once per
@@ -441,6 +545,9 @@ class ServeEngine:
                 entries.append((self._sampling_for(r), self._seed_for(r),
                                 len(r.generated)))
         temps, ks, ps, seeds, counters = sampling_lib.stack(entries)
+        if self._obs:
+            sampling_lib.record_occupancy(self._tracker, reqs,
+                                          step=self._obs_step)
         want_lp = any(r is not None and self._sampling_for(r).logprobs
                       for r in reqs)
         toks, chosen, top_ids, top_lps = self._sample_fn(
@@ -485,16 +592,36 @@ class ServeEngine:
                                np.asarray(r.generated[:-1], np.int32)])
 
     def _record_admissions(self, step: int, group, next_tokens) -> None:
-        for j, (slot, r, _pref, seq, resumed) in enumerate(group):
-            others = [q.uid for i, q in enumerate(self.active)
-                      if q is not None and i != slot]
+        for j, (slot, r, pref, seq, resumed) in enumerate(group):
+            others = tuple(q.uid for i, q in enumerate(self.active)
+                           if q is not None and i != slot)
             self.active[slot] = r
+            first = False
             if not resumed:
                 r.generated.append(int(next_tokens[j]))
                 if r.admit_step is None:
+                    first = True
                     r.admit_step = step
             self.positions[slot] = len(seq)
-            self.admission_log.append((step, slot, r.uid, others))
+            ev = AdmissionEvent(step=step, slot=slot, uid=r.uid,
+                                adapter=r.adapter, resumed=resumed,
+                                prefix_tokens=int(pref),
+                                queueing_delay=r.queueing_delay,
+                                others=others)
+            self.admission_events.append(ev)
+            if self._obs:
+                tr = self._tracker
+                s = self._obs_step
+                tr.event("engine/admission", dataclasses.asdict(ev), step=s)
+                if not resumed:
+                    # the prefill-sampled first token of a fresh admission
+                    # (decode tokens are counted in _observe_decode)
+                    tr.count(f"engine/tokens/{r.adapter}", step=s)
+                if first:
+                    tr.histogram("engine/queueing_delay", r.queueing_delay,
+                                 step=s)
+                if self.scheduler.at_risk(r, step):
+                    tr.count("scheduler/at_risk_admissions", step=s)
 
     def _admit(self, step: int):
         """Fill every free slot from the scheduler.
@@ -536,9 +663,11 @@ class ServeEngine:
                 toks[j, :len(seq)] = seq
                 lens[j] = len(seq)
                 ids[j] = self._adapter_id(r.adapter)
-            logits, cache = self._prefill(
-                tree, {"tokens": jnp.asarray(toks)}, jnp.asarray(lens),
-                jnp.asarray(ids))
+            with self._tracker.time_block("engine/prefill_s",
+                                          step=self._obs_step):
+                logits, cache = self._prefill(
+                    tree, {"tokens": jnp.asarray(toks)}, jnp.asarray(lens),
+                    jnp.asarray(ids))
             nxt = self._sample_rows(logits[:, -1, :self.cfg.vocab_size],
                                     [e[1] for e in group])
             for j, (slot, r, _pref, _seq, _res) in enumerate(group):
@@ -550,12 +679,20 @@ class ServeEngine:
         """Preempt ``slot``: park its computed KV in the retained-prefix
         pool, release its writable pages, and queue it for resumption."""
         r = self.active[slot]
-        r._kv_pin = self.kv.suspend_slot(slot, self._resident_seq(r),
-                                         r.adapter, priority=r.priority)
+        resident = self._resident_seq(r)
+        r._kv_pin = self.kv.suspend_slot(slot, resident, r.adapter,
+                                         priority=r.priority)
         self.active[slot] = None
         self.positions[slot] = 0
         r.preemptions += 1
-        self.preemption_log.append((step, slot, r.uid))
+        ev = PreemptionEvent(step=step, slot=slot, uid=r.uid,
+                             adapter=r.adapter, priority=r.priority,
+                             resident_tokens=len(resident))
+        self.preemption_events.append(ev)
+        if self._obs:
+            self._tracker.count("engine/preemptions", step=self._obs_step)
+            self._tracker.event("engine/preemption", dataclasses.asdict(ev),
+                                step=self._obs_step)
         self.scheduler.push_resume(r)
 
     def _eligible_victims(self, r: Request, step: int, frozen) -> List[int]:
@@ -637,11 +774,16 @@ class ServeEngine:
         frozen = set()         # slots filled this pass: not preemptible
         while free and self.scheduler.has_work():
             pick = None
+            skipped = 0
             for r, resumed in self.scheduler.window(step):
                 res = self._try_admit_pages(free, r, resumed, step, frozen)
                 if res is not None:
                     pick = (r, resumed) + res
                     break
+                skipped += 1   # candidate didn't fit; try the next in-window
+            if self._obs and skipped:
+                self._tracker.count("scheduler/lookahead_skips", skipped,
+                                    step=self._obs_step)
             if pick is None:
                 break          # retry after running slots free pages
             r, resumed, prefix, seq = pick
@@ -679,10 +821,12 @@ class ServeEngine:
             # prefix length; rows gather their whole table, masked by
             # prefix_len
             n_pref = kv.pages_per_slot if prefs.max() else 0
-            logits, new_pools = self._prefill_paged(
-                tree, {"tokens": jnp.asarray(toks)}, kv.pools,
-                jnp.asarray(rows_pt), jnp.asarray(rows_pt[:, :n_pref]),
-                jnp.asarray(lens), jnp.asarray(prefs), jnp.asarray(ids))
+            with self._tracker.time_block("engine/prefill_s",
+                                          step=self._obs_step):
+                logits, new_pools = self._prefill_paged(
+                    tree, {"tokens": jnp.asarray(toks)}, kv.pools,
+                    jnp.asarray(rows_pt), jnp.asarray(rows_pt[:, :n_pref]),
+                    jnp.asarray(lens), jnp.asarray(prefs), jnp.asarray(ids))
             kv.pools = new_pools
             # a resumed request's next token was sampled before suspension:
             # its row is passed as None, so the tail-rebuild logits are
@@ -786,6 +930,28 @@ class ServeEngine:
         self.positions[slot] = 0
         if self.cache_mode == "paged":
             self.kv.free_slot(slot)
+        if self._obs:
+            tr = self._tracker
+            s = self._obs_step
+            tr.count(f"engine/finish/{reason}", step=s)
+            if r.slo_met is not None:
+                tr.count("engine/slo_met" if r.slo_met
+                         else "engine/slo_missed", step=s)
+            tr.event("engine/finish", {
+                "uid": r.uid, "adapter": r.adapter, "reason": reason,
+                "tokens": len(r.generated),
+                "queueing_delay": r.queueing_delay,
+                "preemptions": r.preemptions, "slo_met": r.slo_met}, step=s)
+
+    def _observe_truncated(self, r: Request) -> None:
+        """Count a request returned as a partial (run hit max_steps) — a
+        deadlined one has definitively missed its SLO."""
+        if not self._obs:
+            return
+        s = self._obs_step
+        self._tracker.count("engine/finish/truncated", step=s)
+        if r.deadline_steps is not None:
+            self._tracker.count("engine/slo_missed", step=s)
 
     def _finish_admitted(self, finished: List[Request], step: int) -> None:
         """Finish slots whose prefill-sampled FIRST token already completed
@@ -938,12 +1104,13 @@ class ServeEngine:
         steps = 0
         max_live = 0
         next_arrival = 0
-        preempted_before = len(self.preemption_log)
+        preempted_before = len(self.preemption_events)
         while (next_arrival < len(trace) or self.scheduler.has_work()
                 or any(r is not None for r in self.active)) \
                 and steps < max_steps:
             steps += 1
             self._step = steps
+            self._obs_step += 1
             while (next_arrival < len(trace)
                     and trace[next_arrival][0] <= steps):
                 s, r = trace[next_arrival]
@@ -960,7 +1127,7 @@ class ServeEngine:
                 if (self.cache_mode == "paged" and self.scheduler.has_work()
                         and next_arrival >= len(trace)):
                     head = self.scheduler.window(steps)[0][0]
-                    raise OutOfPages(
+                    raise self.kv.oom(
                         f"request {head.uid} (prompt {len(head.prompt)} "
                         f"tokens) cannot fit an idle page pool of "
                         f"{self.kv.num_pages - 1} pages x "
@@ -969,10 +1136,20 @@ class ServeEngine:
                         f"{self.kv.pages_resident() - self.kv.pages_in_use()}"
                         f" retained)")
                 continue
-            rows, live = self._decode_live(tree, live, steps)
-            if live:
-                toks = self._sample_rows(
-                    rows, [self.active[i] for i in range(self.slots)])
+            # the decode hot path makes ZERO tracker calls under the
+            # default NoopTracker (gated span + gated _observe_decode):
+            # its only instrumentation cost is these bool checks, pinned
+            # <2% by the overhead guard in benchmarks/bench_serve.py
+            span = (self._tracker.time_block("engine/decode_step_s",
+                                             step=self._obs_step)
+                    if self._obs else NULL_SPAN)
+            with span:
+                rows, live = self._decode_live(tree, live, steps)
+                if live:
+                    toks = self._sample_rows(
+                        rows, [self.active[i] for i in range(self.slots)])
+            if self._obs and live:
+                self._observe_decode(live)
             for i in live:
                 r = self.active[i]
                 r.generated.append(int(toks[i]))
@@ -992,13 +1169,16 @@ class ServeEngine:
         self.last_run_max_live = max_live
         #: suspensions this run (SLO-aware preemption observability)
         self.last_run_preemptions = \
-            len(self.preemption_log) - preempted_before
+            len(self.preemption_events) - preempted_before
         self.last_run_truncated = bool(
             next_arrival < len(trace) or self.scheduler.has_work()
             or any(r is not None for r in self.active))
         if self.last_run_truncated:
             n_active = sum(r is not None for r in self.active)
             n_queued = len(self.scheduler) + len(trace) - next_arrival
+            # count every truncated run, even after the warning dedups
+            self._tracker.count("engine/warnings/truncation",
+                                step=self._obs_step)
             if not self._warned_truncation:
                 # once per engine: repeated truncated runs used to re-emit
                 # an identical warning every time
@@ -1011,6 +1191,7 @@ class ServeEngine:
                 if r is None:
                     continue
                 r.truncated = True
+                self._observe_truncated(r)
                 finished.append(r)
                 self._inflight.discard(r.uid)
                 self.active[i] = None
@@ -1019,6 +1200,7 @@ class ServeEngine:
                     self.kv.free_slot(i)
             for r in self.scheduler.drain():
                 r.truncated = True
+                self._observe_truncated(r)
                 pin = getattr(r, "_kv_pin", None)
                 if pin is not None:
                     # abandoned suspension: demote its retained pages to
@@ -1029,6 +1211,7 @@ class ServeEngine:
                 finished.append(r)
             for _, r in trace[next_arrival:]:
                 r.truncated = True
+                self._observe_truncated(r)
                 finished.append(r)
         self._pending_trace_uids = set()
         self._step = 0

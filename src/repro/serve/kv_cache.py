@@ -66,13 +66,28 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as model_lib
+from repro.obs import NOOP, Tracker
 
 #: reserved page id no slot ever owns; all masked/unallocated refs land here
 TRASH_PAGE = 0
 
 
 class OutOfPages(RuntimeError):
-    """Every non-trash page is referenced; admission must wait for frees."""
+    """Every non-trash page is referenced; admission must wait for frees.
+
+    ``referenced`` / ``resident`` / ``retained`` carry the pool pressure at
+    raise time (None when the raiser had no pool in hand); the same counts
+    are recorded as ``kv/oom_*`` gauges on the cache's tracker, so
+    suppressed/retried OOMs stay observable even when the exception is
+    caught."""
+
+    def __init__(self, msg: str, referenced: Optional[int] = None,
+                 resident: Optional[int] = None,
+                 retained: Optional[int] = None):
+        super().__init__(msg)
+        self.referenced = referenced
+        self.resident = resident
+        self.retained = retained
 
 
 class PagedKVCache:
@@ -116,6 +131,61 @@ class PagedKVCache:
         self.stats = {"prefix_queries": 0, "prefix_hits": 0,
                       "pages_aliased": 0, "pages_allocated": 0,
                       "evictions": 0, "suspends": 0, "resumes": 0}
+        #: metrics backend (repro.obs); the engine shares its own via
+        #: :meth:`set_tracker`.  ``_obs`` gates per-call metric work so the
+        #: default NoopTracker costs the allocator nothing.
+        self.tracker: Tracker = NOOP
+        self._obs = False
+
+    def set_tracker(self, tracker: Tracker) -> None:
+        self.tracker = tracker
+        self._obs = not tracker.is_noop
+
+    # -- observability -----------------------------------------------------
+    def observe_pool(self, step: Optional[int] = None) -> None:
+        """Gauge the pool's occupancy/pressure (host-side counters only)."""
+        tr = self.tracker
+        in_use = self.pages_in_use()
+        tr.gauge("kv/pages_in_use", in_use, step=step)
+        tr.gauge("kv/pages_retained", len(self._reusable), step=step)
+        tr.gauge("kv/pool_pressure", in_use / (self.num_pages - 1),
+                 step=step)
+
+    def conservation(self) -> Dict[str, int]:
+        """Allocator conservation snapshot: every non-trash page is exactly
+        one of free / referenced / retained.  ``conserved`` going False
+        means the free list, refcounts, and retained pool disagree — a
+        leak or double-free."""
+        in_use = self.pages_in_use()
+        snap = {"free": len(self._free), "in_use": in_use,
+                "retained": len(self._reusable),
+                "total": self.num_pages - 1}
+        snap["conserved"] = int(
+            snap["free"] + in_use + snap["retained"] == snap["total"])
+        return snap
+
+    def record_conservation(self, step: Optional[int] = None) -> None:
+        """Gauge a :meth:`conservation` snapshot (suspend/resume-heavy
+        schedules call this so refcount accounting drift is visible in the
+        metrics stream, not just in test assertions)."""
+        for k, v in self.conservation().items():
+            self.tracker.gauge(f"kv/conservation_{k}", v, step=step)
+
+    def oom(self, msg: str) -> OutOfPages:
+        """Build an :class:`OutOfPages` carrying the pool pressure at raise
+        time, gauging the same counts on the tracker (raise sites do
+        ``raise self.oom(...)`` so even caught-and-retried OOMs leave a
+        metrics trail)."""
+        referenced = self.pages_in_use()
+        resident = self.pages_resident()
+        retained = len(self._reusable)
+        tr = self.tracker
+        tr.count("kv/out_of_pages")
+        tr.gauge("kv/oom_referenced", referenced)
+        tr.gauge("kv/oom_resident", resident)
+        tr.gauge("kv/oom_retained", retained)
+        return OutOfPages(msg, referenced=referenced, resident=resident,
+                          retained=retained)
 
     # -- hashing -----------------------------------------------------------
     def _page_hashes(self, prompt: np.ndarray, adapter_key: str) -> List[str]:
@@ -166,8 +236,10 @@ class PagedKVCache:
             if h is not None:
                 self._hash_to_page.pop(h, None)
             self.stats["evictions"] += 1
+            if self._obs:
+                self.tracker.count("kv/evictions")
         else:
-            raise OutOfPages(
+            raise self.oom(
                 f"all {self.num_pages - 1} KV pages referenced "
                 f"({self.pages_in_use()} live, "
                 f"{self.pages_resident()} resident, 0 retained)")
@@ -243,7 +315,7 @@ class PagedKVCache:
         if n_fresh > len(self._free) + len(self._reusable):
             for p in shared:
                 self._release(p)
-            raise OutOfPages(
+            raise self.oom(
                 f"{n_fresh} pages needed, "
                 f"{len(self._free) + len(self._reusable)} allocatable "
                 f"({self.pages_in_use()} of {self.num_pages - 1} referenced, "
@@ -253,6 +325,13 @@ class PagedKVCache:
         if shared:
             self.stats["prefix_hits"] += 1
             self.stats["pages_aliased"] += len(shared)
+        if self._obs:
+            # hit/miss in TOKENS: aliased-prefix tokens never re-prefill
+            self.tracker.count("kv/prefix_hit_tokens",
+                               len(shared) * self.page_size)
+            self.tracker.count("kv/prefix_miss_tokens",
+                               n - len(shared) * self.page_size)
+            self.observe_pool()
         row = shared + fresh
         assert len(set(row)) == len(row), \
             f"duplicate page id in slot {slot} table: {row}"
@@ -290,7 +369,7 @@ class PagedKVCache:
         :class:`OutOfPages` is what triggers decode-time suspension)."""
         idx = pos // self.page_size
         if idx >= self.pages_per_slot:
-            raise OutOfPages(
+            raise self.oom(
                 f"position {pos} beyond slot capacity "
                 f"{self.pages_per_slot * self.page_size}")
         while self.n_pages[slot] <= idx:
@@ -329,6 +408,9 @@ class PagedKVCache:
         self._next_pin += 1
         self._pins[token] = (priority, {p: i for i, p in enumerate(covered)})
         self.stats["suspends"] += 1
+        if self._obs:
+            self.tracker.count("kv/suspends")
+            self.record_conservation()
         self.free_slot(slot)
         return token
 
@@ -348,6 +430,8 @@ class PagedKVCache:
         if pin is not None:
             self.release_pin(pin)
         self.stats["resumes"] += 1
+        if self._obs:
+            self.tracker.count("kv/resumes")
         return prefix
 
     def release_pin(self, pin: int) -> None:

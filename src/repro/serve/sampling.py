@@ -177,6 +177,23 @@ def stack(entries: Sequence[Tuple[SamplingParams, int, int]]):
     return temps, top_ks, top_ps, seeds, counters
 
 
+def record_occupancy(tracker, reqs, step=None) -> None:
+    """Fused-sampler batch occupancy metrics (:mod:`repro.obs`).
+
+    The sampler always draws over the full ``(slots,)`` row set — dead
+    slots decode as ghosts and resumed requests' tail-rebuild draws are
+    discarded — so occupancy (live rows / total rows) is the fraction of
+    fused-sampler work that produces a consumed token.  ``reqs`` is the
+    per-row request list the engine passes to its sampler (None = ghost
+    row).  Pure host-side bookkeeping over values the engine already had.
+    """
+    live = sum(r is not None for r in reqs)
+    tracker.histogram("sampler/batch_occupancy",
+                      live / max(len(reqs), 1), step=step)
+    tracker.count("sampler/live_rows", live, step=step)
+    tracker.count("sampler/ghost_rows", len(reqs) - live, step=step)
+
+
 def _candidates(z, top_k, top_p):
     """Candidate set of each row of scaled logits: ``(values, token_ids,
     keep)`` over the top ``min(MAX_CANDIDATES, V)`` entries, descending,

@@ -38,6 +38,8 @@ from __future__ import annotations
 import math
 from typing import List, Optional, Tuple, TYPE_CHECKING
 
+from repro.obs import NOOP, Tracker
+
 if TYPE_CHECKING:                                    # pragma: no cover
     from repro.serve.engine import Request
 
@@ -58,6 +60,9 @@ class StreamScheduler:
         self._pending: List["Request"] = []    # submission order
         self._resume: List["Request"] = []     # suspension order
         self._stamp = 0                        # total submission counter
+        #: metrics backend (repro.obs) — the engine shares its own; queue
+        #: depth is gauged per admission pass, submissions are counted
+        self.tracker: Tracker = NOOP
 
     def configure(self, lookahead: int, preempt: bool,
                   risk_margin: Optional[int] = None) -> None:
@@ -74,6 +79,9 @@ class StreamScheduler:
         request._sched_stamp = self._stamp
         self._stamp += 1
         self._pending.append(request)
+        if not self.tracker.is_noop:
+            self.tracker.count("scheduler/submitted")
+            self.tracker.gauge("scheduler/queue_depth", len(self))
 
     def push_resume(self, request: "Request") -> None:
         """Enqueue a preempted request for resumption."""
@@ -126,6 +134,13 @@ class StreamScheduler:
         """Policy-ordered admission candidates: the whole resume lane plus
         the first ``1 + lookahead`` pending requests, as ``(request,
         resumed)`` pairs."""
+        # gauge at step=None (tracker's last step): ``step`` here is the
+        # per-RUN engine step, which resets across runs — the tracker's
+        # step domain is the engine's cumulative counter
+        if not self.tracker.is_noop:
+            self.tracker.gauge("scheduler/queue_depth", len(self))
+            self.tracker.gauge("scheduler/resume_lane_depth",
+                               len(self._resume))
         cands = [(r, True) for r in self._resume]
         cands += [(r, False) for r in self._pending[:1 + self.lookahead]]
         cands.sort(key=lambda c: self._key(c[0], step, c[1]))

@@ -113,6 +113,25 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig,
     return train_step
 
 
+def log_step_metrics(tracker, step: int, metrics: Dict,
+                     step_time: Optional[float] = None) -> None:
+    """Report one train step through the :mod:`repro.obs` Tracker interface
+    — the same surface the serving stack reports through, so a
+    train-to-serve process emits one consistent metrics stream.
+
+    Logs every scalar in ``metrics`` under ``train/`` (loss, grad_norm,
+    lr, ...) against the optimizer step, plus ``train/step_time_s`` as a
+    histogram when the caller hands in a measured wall-clock.  Call AFTER
+    blocking on the step's outputs (the float() casts sync otherwise) and
+    at your logging cadence — this is host-side work per call, not per
+    jitted step."""
+    scalars = {f"train/{k}": float(v) for k, v in metrics.items()
+               if jnp.ndim(v) == 0}
+    tracker.log(scalars, step=step)
+    if step_time is not None:
+        tracker.histogram("train/step_time_s", step_time, step=step)
+
+
 # ---------------------------------------------------------------------------
 # sharding for the train state
 # ---------------------------------------------------------------------------

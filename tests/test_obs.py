@@ -1,0 +1,358 @@
+"""Observability subsystem (repro.obs): tracker primitive semantics, jsonl
+schema round-trip, and end-to-end capture of an instrumented streaming
+serve run — the captured aggregates must agree with the ``Request`` stamps
+and KV-cache stats the engine keeps independently, and instrumentation must
+add no recompiles and change no outputs."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.obs import (NOOP, SCHEMA_VERSION, CompositeTracker,
+                       InMemoryTracker, JsonlTracker, NoopTracker, Tracker,
+                       read_jsonl, replay)
+from repro.serve import PagedKVCache, Request, ServeEngine
+from repro.serve import sampling as sampling_lib
+from repro.train import trainer
+
+
+# -- primitives --------------------------------------------------------------
+
+def test_counter_monotone():
+    t = InMemoryTracker()
+    t.count("a")            # default increment of 1
+    t.count("a", 2.5)
+    assert t.counter("a") == 3.5
+    with pytest.raises(ValueError, match="monotone"):
+        t.count("a", -1)
+    assert t.counter("a") == 3.5, "rejected increment must not apply"
+    assert t.counter("never_recorded") == 0.0
+
+
+def test_step_monotone_per_tracker():
+    t = InMemoryTracker()
+    t.gauge("x", 1.0, step=5)
+    t.gauge("x", 2.0)             # step=None inherits the last step
+    t.gauge("x", 3.0, step=5)     # equal steps are fine
+    with pytest.raises(ValueError, match="backwards"):
+        t.gauge("x", 4.0, step=4)
+    assert t.gauges["x"] == 3.0
+
+
+def test_gauge_last_write_wins_and_scalars_log():
+    t = InMemoryTracker()
+    t.gauge("g", 1.0, step=1)
+    t.gauge("g", -7.5, step=2)    # gauges may be signed
+    assert t.gauges["g"] == -7.5
+    t.log({"loss": 2.0, "lr": 1e-3}, step=3)
+    t.log({"loss": 1.5}, step=4)
+    assert t.scalars["loss"] == [(3, 2.0), (4, 1.5)]
+    assert t.scalars["lr"] == [(3, 1e-3)]
+
+
+def test_histogram_quantiles_match_numpy():
+    rng = np.random.default_rng(0)
+    vals = rng.normal(size=257).astype(np.float64)
+    t = InMemoryTracker()
+    for v in vals:
+        t.histogram("h", float(v))
+    for q in (0.0, 0.25, 0.5, 0.9, 0.99, 1.0):
+        assert t.quantile("h", q) == np.quantile(vals, q)
+    np.testing.assert_array_equal(t.quantile("h", [0.1, 0.5, 0.9]),
+                                  np.quantile(vals, [0.1, 0.5, 0.9]))
+    with pytest.raises(KeyError):
+        t.quantile("missing", 0.5)
+
+
+def test_time_block_records_span_histogram():
+    t = InMemoryTracker()
+    with t.time_block("span_s", step=3) as sp:
+        pass
+    assert sp.seconds is not None and sp.seconds >= 0
+    assert t.values("span_s") == [sp.seconds]
+
+
+def test_noop_tracker_discards_and_shares_null_span():
+    t = NoopTracker()
+    assert t.is_noop and NOOP.is_noop and not InMemoryTracker().is_noop
+    # spans are one shared object: no allocation, no clock read per use
+    assert t.time_block("a") is t.time_block("b")
+    with t.time_block("c"):
+        pass
+    t.count("x", -5)  # noop doesn't even validate — pure discard
+    t.gauge("x", 1)
+    t.log({"a": 1})
+    t.event("e", {})
+
+
+def test_composite_fans_out():
+    a, b = InMemoryTracker(), InMemoryTracker()
+    t = CompositeTracker(a, b)
+    assert not t.is_noop
+    assert CompositeTracker(NoopTracker(), NoopTracker()).is_noop
+    t.count("c", 2, step=1)
+    t.event("e", {"k": "v"}, step=1)
+    with t.time_block("s", step=2):
+        pass
+    for child in (a, b):
+        assert child.counter("c") == 2
+        assert child.events_named("e")[0]["k"] == "v"
+        assert len(child.values("s")) == 1
+
+
+def test_counters_under_prefix():
+    t = InMemoryTracker()
+    t.count("engine/tokens/base", 3)
+    t.count("engine/tokens/tuned", 5)
+    t.count("kv/evictions", 1)
+    assert t.counters_under("engine/tokens/") == {"base": 3.0, "tuned": 5.0}
+
+
+# -- jsonl backend -----------------------------------------------------------
+
+def test_jsonl_round_trip(tmp_path):
+    path = str(tmp_path / "metrics.jsonl")
+    with JsonlTracker(path) as t:
+        t.count("engine/tokens/base", 3, step=1)
+        t.gauge("kv/pool_pressure", 0.5, step=1)
+        t.histogram("engine/decode_step_s", 0.01, step=2)
+        t.log({"train/loss": 2.25, "train/lr": 1e-4}, step=2)
+        t.event("engine/admission", {"uid": 0, "slot": 1}, step=2)
+    recs = read_jsonl(path)
+    assert [r["kind"] for r in recs] == ["count", "gauge", "histogram",
+                                         "scalars", "event"]
+    for r in recs:
+        assert r["v"] == SCHEMA_VERSION
+        assert isinstance(r["step"], int)
+        assert isinstance(r["t"], float)
+    mem = replay(recs)
+    assert mem.counter("engine/tokens/base") == 3
+    assert mem.gauges["kv/pool_pressure"] == 0.5
+    assert mem.values("engine/decode_step_s") == [0.01]
+    assert mem.scalars["train/loss"] == [(2, 2.25)]
+    assert mem.events_named("engine/admission")[0]["uid"] == 0
+
+
+def test_jsonl_rejects_malformed(tmp_path):
+    cases = {
+        "truncated": '{"v": 1, "t": 0.0, "step": 1, "kind": "cou',
+        "bad_version": json.dumps({"v": 99, "t": 0.0, "step": 1,
+                                   "kind": "count", "name": "a",
+                                   "value": 1.0}),
+        "unknown_kind": json.dumps({"v": 1, "t": 0.0, "step": 1,
+                                    "kind": "surprise", "name": "a",
+                                    "value": 1.0}),
+        "missing_step": json.dumps({"v": 1, "t": 0.0, "kind": "count",
+                                    "name": "a", "value": 1.0}),
+        "count_no_value": json.dumps({"v": 1, "t": 0.0, "step": 1,
+                                      "kind": "count", "name": "a"}),
+        "event_no_data": json.dumps({"v": 1, "t": 0.0, "step": 1,
+                                     "kind": "event", "name": "e"}),
+    }
+    for label, line in cases.items():
+        p = tmp_path / f"{label}.jsonl"
+        p.write_text(line + "\n")
+        with pytest.raises(ValueError):
+            read_jsonl(str(p))
+
+
+def test_jsonl_write_after_finish_raises(tmp_path):
+    t = JsonlTracker(str(tmp_path / "m.jsonl"))
+    t.count("a", step=1)
+    t.finish()
+    t.finish()  # idempotent
+    with pytest.raises(ValueError, match="finished"):
+        t.count("b", step=2)
+
+
+# -- serving capture ---------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _pressure_workload(cfg):
+    """One big low-priority request plus small deadlined high-priority
+    bursts into a 6-usable-page pool: forces queueing and preemption."""
+    big = Request(uid=0,
+                  prompt=(np.arange(24, dtype=np.int32) * 3 + 1)
+                  % cfg.vocab_size,
+                  max_new_tokens=20, priority=0)
+    smalls = [Request(uid=1 + i,
+                      prompt=(np.arange(6, dtype=np.int32) + 11 * i)
+                      % cfg.vocab_size,
+                      max_new_tokens=4, priority=1, deadline_steps=12)
+              for i in range(4)]
+    trace = [(1, big)] + [(3 + 2 * i, r) for i, r in enumerate(smalls)]
+    return trace
+
+
+def _stream_engine(params, cfg, tracker=None):
+    return ServeEngine(params, cfg, max_len=56, slots=2, cache_mode="paged",
+                       page_size=8, num_pages=7, tracker=tracker)
+
+
+def test_stream_capture_matches_request_stamps(setup):
+    """The InMemoryTracker aggregates from one preempting run_stream agree
+    with the ground truth the engine stamps onto the Requests."""
+    cfg, params = setup
+    tr = InMemoryTracker()
+    eng = _stream_engine(params, cfg, tracker=tr)
+    done = eng.run_stream(_pressure_workload(cfg), max_steps=200)
+    assert all(r.done for r in done) and len(done) == 5
+
+    # per-adapter token throughput: counted first tokens (admission) +
+    # decode tokens must equal what each request actually generated
+    tokens = tr.counters_under("engine/tokens/")
+    by_adapter = {}
+    for r in done:
+        by_adapter[r.adapter] = by_adapter.get(r.adapter, 0) + len(r.generated)
+    assert {k: int(v) for k, v in tokens.items()} == by_adapter
+
+    # queueing delay histogram: one observation per first admission, the
+    # multiset matching the Request stamps exactly
+    assert sorted(tr.values("engine/queueing_delay")) == \
+        sorted(float(r.queueing_delay) for r in done)
+
+    # SLO attainment: counted finishes of deadlined requests only
+    deadlined = [r for r in done if r.deadline_steps is not None]
+    assert tr.counter("engine/slo_met") == \
+        sum(1 for r in deadlined if r.slo_met)
+    assert tr.counter("engine/slo_missed") == \
+        sum(1 for r in deadlined if not r.slo_met)
+
+    # preemption counts: tracker vs engine event list vs Request stamps
+    assert tr.counter("engine/preemptions") == len(eng.preemption_events) > 0
+    assert sum(r.preemptions for r in done) > 0
+    assert len(tr.events_named("engine/preemption")) == \
+        len(eng.preemption_events)
+
+    # finish accounting: every request finished exactly once, with reasons
+    finishes = tr.counters_under("engine/finish/")
+    assert sum(finishes.values()) == len(done)
+    assert len(tr.events_named("engine/finish")) == len(done)
+
+    # admission events mirror the engine's structured list
+    assert len(tr.events_named("engine/admission")) == \
+        len(eng.admission_events)
+
+    # prefix-reuse token accounting agrees with the allocator's own stats
+    assert tr.counter("kv/prefix_hit_tokens") == \
+        eng.kv.stats["pages_aliased"] * eng.kv.page_size
+    assert tr.counter("kv/suspends") == eng.kv.stats["suspends"]
+    assert tr.counter("kv/resumes") == eng.kv.stats["resumes"]
+
+    # conservation snapshots were recorded and never went false
+    assert all(v == 1.0 for v in [tr.gauges["kv/conservation_conserved"]])
+
+    # all four serving layers reported under their prefixes
+    names = set(tr.counters) | set(tr.gauges) | set(tr.histograms)
+    for prefix in ("engine/", "scheduler/", "kv/", "sampler/"):
+        assert any(n.startswith(prefix) for n in names), \
+            f"no metrics recorded under {prefix}"
+    # wall-clock spans for both engine phases
+    assert len(tr.values("engine/decode_step_s")) > 0
+    assert len(tr.values("engine/prefill_s")) > 0
+    # sampler occupancy in [0, 1] (0 is real: a resume-only prefill group
+    # discards every row's draw) with at least some live batches
+    occ = tr.values("sampler/batch_occupancy")
+    assert occ and all(0 <= o <= 1 for o in occ) and max(occ) > 0
+
+
+def test_instrumentation_no_recompiles_no_output_change(setup):
+    """Swapping a recording tracker onto a warmed engine must trigger zero
+    new sampler traces and leave greedy outputs bit-identical."""
+    cfg, params = setup
+    eng = _stream_engine(params, cfg)          # default NoopTracker
+    base = eng.run_stream(_pressure_workload(cfg), max_steps=200)
+    before = sampling_lib.trace_count()
+    eng.tracker = InMemoryTracker()
+    instrumented = eng.run_stream(_pressure_workload(cfg), max_steps=200)
+    assert sampling_lib.trace_count() == before, \
+        "attaching a tracker recompiled the sampler"
+    assert {r.uid: r.generated for r in base} == \
+        {r.uid: r.generated for r in instrumented}
+
+
+def test_engine_reuse_across_runs_keeps_steps_monotone(setup):
+    """The tracker's step domain is cumulative engine steps: re-running a
+    tracked engine (per-run step counter resets) must not raise the
+    monotone-step guard."""
+    cfg, params = setup
+    eng = _stream_engine(params, cfg, tracker=InMemoryTracker())
+    for _ in range(2):
+        r = Request(uid=0, prompt=np.arange(6, dtype=np.int32),
+                    max_new_tokens=3)
+        assert eng.run_stream([(0, r)], max_steps=32)[0].done
+
+
+def test_deprecated_log_shims(setup):
+    """admission_log / preemption_log still answer (tuple formats
+    unchanged) but warn: the structured event lists are the replacement."""
+    cfg, params = setup
+    eng = _stream_engine(params, cfg)
+    eng.run_stream(_pressure_workload(cfg), max_steps=200)
+    with pytest.warns(DeprecationWarning, match="admission_events"):
+        alog = eng.admission_log
+    assert alog == [(e.step, e.slot, e.uid, list(e.others))
+                    for e in eng.admission_events]
+    with pytest.warns(DeprecationWarning, match="preemption"):
+        plog = eng.preemption_log
+    assert plog == [(e.step, e.slot, e.uid) for e in eng.preemption_events]
+    assert len(alog) > 0 and len(plog) > 0
+
+
+# -- KV cache capture --------------------------------------------------------
+
+def test_kv_prefix_hit_tokens_counted(setup):
+    cfg, params = setup
+    kv = PagedKVCache(cfg, slots=2, max_len=32, page_size=8)
+    tr = InMemoryTracker()
+    kv.set_tracker(tr)
+    prompt = np.arange(24, dtype=np.int32)
+    kv.admit(0, prompt, "base")        # cold: all miss
+    kv.commit_prompt(0, prompt, "base")  # register page hashes for reuse
+    kv.free_slot(0)                    # pages retained for reuse
+    shared = kv.admit(1, prompt, "base")
+    assert shared == 16                # 2 full pages aliased, 1 suffix page
+    assert tr.counter("kv/prefix_hit_tokens") == \
+        kv.stats["pages_aliased"] * kv.page_size == 16
+    assert tr.counter("kv/prefix_miss_tokens") == 48 - 16
+    assert tr.gauges["kv/pages_in_use"] == kv.pages_in_use()
+    assert 0 < tr.gauges["kv/pool_pressure"] <= 1
+
+
+def test_out_of_pages_records_pool_gauges(setup):
+    cfg, params = setup
+    kv = PagedKVCache(cfg, slots=2, max_len=16, page_size=8, num_pages=2)
+    tr = InMemoryTracker()
+    kv.set_tracker(tr)
+    kv.admit(0, np.arange(5, dtype=np.int32), "base")   # takes the one page
+    from repro.serve import OutOfPages
+    with pytest.raises(OutOfPages) as ei:
+        kv.admit(1, np.arange(12, dtype=np.int32), "base")
+    assert ei.value.referenced == 1
+    assert ei.value.retained == 0
+    assert tr.counter("kv/out_of_pages") == 1
+    assert tr.gauges["kv/oom_referenced"] == 1
+    assert tr.gauges["kv/oom_retained"] == 0
+
+
+# -- trainer capture ---------------------------------------------------------
+
+def test_trainer_log_step_metrics():
+    tr = InMemoryTracker()
+    metrics = {"loss": np.float32(2.0), "grad_norm": np.float64(0.5),
+               "lr": 1e-4, "per_token": np.zeros((4,))}   # vector: skipped
+    trainer.log_step_metrics(tr, 1, metrics, step_time=0.25)
+    trainer.log_step_metrics(tr, 2, {"loss": 1.5})
+    assert tr.scalars["train/loss"] == [(1, 2.0), (2, 1.5)]
+    assert tr.scalars["train/grad_norm"] == [(1, 0.5)]
+    assert "train/per_token" not in tr.scalars
+    assert tr.values("train/step_time_s") == [0.25]
