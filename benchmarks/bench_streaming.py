@@ -22,15 +22,23 @@ Guardrails (CI fails on regression):
   outputs per request (suspend/resume and out-of-order admission are
   schedule changes, never output changes), and no page leaks.
 
+A second scenario guards CHUNKED PREFILL: a mixed trace of long-prompt and
+short decode-heavy requests served one-shot vs chunked under the same
+nonzero-prefill-cost :class:`TokenCostModel`.  The p99 per-step cost over
+steps with a live decode (the deterministic decode-latency proxy from
+``ServeEngine.last_run_step_costs``) must be strictly lower chunked — a
+long prompt no longer lands its whole prefill in one step that a decoding
+request is also waiting on — with zero token divergence at equal pool.
+
 Rows feed the ``--json`` artifact CI uploads (see run.py --quick).
 """
 import jax
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import bench_row
 from repro.configs import get_config
 from repro.models import model as model_lib
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, ServeEngine, TokenCostModel
 
 MAX_LEN = 56
 PAGE = 8
@@ -91,17 +99,18 @@ def main(quick: bool = False):
     assert not slo.last_run_truncated
     m_slo = _metrics(done_slo)
 
-    csv_row("stream_fifo_p99_delay", m_fifo["p99_delay"],
-            f"p50={m_fifo['p50_delay']:.0f}, "
-            f"slo={100 * m_fifo['slo_attained']:.0f}%, "
-            f"steps={fifo.last_run_steps}")
-    csv_row("stream_slo_p99_delay", m_slo["p99_delay"],
-            f"p50={m_slo['p50_delay']:.0f}, "
-            f"slo={100 * m_slo['slo_attained']:.0f}%, "
-            f"steps={slo.last_run_steps}, "
-            f"preemptions={slo.last_run_preemptions}")
-    csv_row("stream_slo_attainment_pct", 100 * m_slo["slo_attained"],
-            f"fifo baseline {100 * m_fifo['slo_attained']:.0f}%")
+    bench_row("stream_fifo_p99_delay", m_fifo["p99_delay"], unit="steps",
+              detail=f"p50={m_fifo['p50_delay']:.0f}, "
+                     f"slo={100 * m_fifo['slo_attained']:.0f}%, "
+                     f"steps={fifo.last_run_steps}")
+    bench_row("stream_slo_p99_delay", m_slo["p99_delay"], unit="steps",
+              detail=f"p50={m_slo['p50_delay']:.0f}, "
+                     f"slo={100 * m_slo['slo_attained']:.0f}%, "
+                     f"steps={slo.last_run_steps}, "
+                     f"preemptions={slo.last_run_preemptions}")
+    bench_row("stream_slo_attainment_pct", 100 * m_slo["slo_attained"],
+              unit="pct",
+              detail=f"fifo baseline {100 * m_fifo['slo_attained']:.0f}%")
 
     # -- guardrails ---------------------------------------------------------
     assert slo.last_run_preemptions >= 1, (
@@ -124,6 +133,77 @@ def main(quick: bool = False):
           f"{100 * m_fifo['slo_attained']:.0f}% (fifo), p99 delay "
           f"{m_slo['p99_delay']:.0f} < {m_fifo['p99_delay']:.0f} steps, "
           f"{slo.last_run_preemptions} preemptions, tokens identical")
+
+    _chunked_prefill_guard(params, cfg, quick)
+
+
+def _mixed_workload(cfg, n_pairs):
+    """Long prompts with short decodes interleaved with short prompts that
+    decode for a while — the chunked-prefill stress: a one-shot engine
+    lands each 40-token prefill in one step its co-resident decode also
+    waits on."""
+    trace = []
+    for i in range(n_pairs):
+        trace.append((1 + 6 * i, Request(
+            uid=100 + i,
+            prompt=(np.arange(6, dtype=np.int32) + 7 * i) % cfg.vocab_size,
+            max_new_tokens=12)))
+        trace.append((2 + 6 * i, Request(
+            uid=200 + i,
+            prompt=(np.arange(40, dtype=np.int32) * 5 + i) % cfg.vocab_size,
+            max_new_tokens=4)))
+    return trace
+
+
+def _p99_decode_cost(engine):
+    """p99 per-step cost over the steps that had >= 1 live decode slot —
+    how long a decoding request waited on the slowest 1% of its steps
+    (deterministic: TokenCostModel units, not wall-clock)."""
+    costs = [c for c, live in engine.last_run_step_costs if live > 0]
+    return float(np.percentile(costs, 99))
+
+
+def _chunked_prefill_guard(params, cfg, quick):
+    n_pairs = 2 if quick else 4
+    cm = TokenCostModel(decode_step_cost=1.0, prefill_token_cost=0.1)
+
+    def engine(**kw):
+        return ServeEngine(params, cfg, max_len=MAX_LEN, slots=SLOTS,
+                           cache_mode="paged", page_size=PAGE,
+                           num_pages=13, **kw)
+
+    oneshot = engine(cost_model=cm)
+    done_one = oneshot.run_stream(_mixed_workload(cfg, n_pairs),
+                                  max_steps=2048)
+    assert not oneshot.last_run_truncated
+    chunked = engine(cost_model=TokenCostModel(
+        decode_step_cost=1.0, prefill_token_cost=0.1, step_budget=2.0),
+        prefill_chunk_tokens=PAGE)
+    done_chk = chunked.run_stream(_mixed_workload(cfg, n_pairs),
+                                  max_steps=2048)
+    assert not chunked.last_run_truncated
+
+    p99_one = _p99_decode_cost(oneshot)
+    p99_chk = _p99_decode_cost(chunked)
+    bench_row("stream_oneshot_p99_decode_cost", p99_one, unit="cost",
+              detail=f"steps={oneshot.last_run_steps}")
+    bench_row("stream_chunked_p99_decode_cost", p99_chk, unit="cost",
+              detail=f"steps={chunked.last_run_steps}, "
+                     f"chunk={PAGE}, budget=2.0")
+
+    # -- guardrails ---------------------------------------------------------
+    assert p99_chk < p99_one, (
+        f"chunked prefill must strictly beat one-shot on p99 decode-step "
+        f"cost at equal pool: {p99_chk} vs {p99_one}")
+    got_one = {r.uid: list(r.generated) for r in done_one}
+    got_chk = {r.uid: list(r.generated) for r in done_chk}
+    assert got_chk == got_one, (
+        "chunked prefill diverged from one-shot outputs — chunking must be "
+        "a schedule change, never an output change")
+    for eng in (oneshot, chunked):
+        assert eng.kv.pages_in_use() == 0, "chunked benchmark leaked pages"
+    print(f"chunked-prefill guardrails passed: p99 decode-step cost "
+          f"{p99_chk:.2f} < {p99_one:.2f} (one-shot), tokens identical")
 
 
 if __name__ == "__main__":

@@ -1,14 +1,16 @@
 """Shared benchmark helpers.
 
 Result emission goes through a :mod:`repro.obs` tracker: every
-:func:`csv_row` is one ``bench_row`` event (plus a ``bench/<name>`` gauge)
+:func:`bench_row` is one ``bench_row`` event (plus a ``bench/<name>`` gauge)
 on the module :data:`TRACKER` — an ``InMemoryTracker`` by default, which
 ``run.py`` wraps in a ``CompositeTracker`` with a ``JsonlTracker`` when
 ``--metrics`` asks for the line-delimited artifact CI uploads.  The
 historical ``--json`` summary is derived from the same event stream
-(:func:`results`), so both artifacts always agree.
+(:func:`results`), so both artifacts always agree.  :func:`csv_row` is the
+deprecated fixed-schema predecessor, kept as a shim over :func:`bench_row`.
 """
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -72,19 +74,44 @@ def add_tracker(tracker: Tracker) -> None:
     TRACKER = CompositeTracker(TRACKER, tracker)
 
 
-def csv_row(name, us_per_call, derived=""):
+def bench_row(name, value, unit="us_per_call", **extra):
+    """Emit one benchmark result row: a ``bench_row`` event on the tracker,
+    a ``bench/<name>`` gauge, and the human-readable CSV line.
+
+    ``value`` is the row's headline number, recorded under the ``unit`` key
+    (so a latency row and a percentage row don't share a misleading column
+    name); ``extra`` fields ride along verbatim in the event payload and the
+    --json summary."""
     # payload key is "bench", not "name": InMemoryTracker flattens event
     # payloads over {"step", "name"}, so a payload "name" would shadow the
     # event name and break events_named() lookups
-    row = {"bench": name, "us_per_call": round(float(us_per_call), 1),
-           "derived": str(derived)}
+    row = {"bench": name, "unit": unit, unit: round(float(value), 4)}
+    row.update({k: str(v) for k, v in extra.items()})
     TRACKER.event("bench_row", row)
-    TRACKER.gauge(f"bench/{name}", row["us_per_call"])
-    print(f"{name},{us_per_call:.1f},{derived}")
+    TRACKER.gauge(f"bench/{name}", row[unit])
+    extras = ",".join(str(v) for v in extra.values())
+    print(f"{name},{row[unit]},{extras}")
+
+
+def csv_row(name, us_per_call, derived=""):
+    """Deprecated: use :func:`bench_row`.  Fixed-schema shim kept so older
+    benchmark scripts keep emitting rows unchanged."""
+    warnings.warn(
+        "benchmarks.common.csv_row is deprecated: use bench_row(name, "
+        "value, unit=..., **extra) instead", DeprecationWarning,
+        stacklevel=2)
+    bench_row(name, round(float(us_per_call), 1), derived=str(derived))
 
 
 def results():
-    """All csv_row payloads so far (the --json summary artifact)."""
-    return [{"name": e["bench"], "us_per_call": e["us_per_call"],
-             "derived": e["derived"]}
-            for e in CAPTURE.events_named("bench_row")]
+    """All bench_row payloads so far (the --json summary artifact).  Rows
+    keep their per-unit value key; the historical ``us_per_call``/
+    ``derived`` fields appear whenever the row carried them."""
+    out = []
+    for e in CAPTURE.events_named("bench_row"):
+        unit = e.get("unit", "us_per_call")
+        row = {"name": e["bench"], "unit": unit, unit: e.get(unit)}
+        row.update({k: v for k, v in e.items()
+                    if k not in ("bench", "unit", "name", "step", unit)})
+        out.append(row)
+    return out

@@ -22,6 +22,8 @@ from repro.kernels.blockdiag_rotate import blockdiag_rotate_pallas
 from repro.kernels.cayley_kernel import cayley_neumann_pallas
 from repro.kernels.gather_delta_matmul import gather_delta_matmul_pallas
 from repro.kernels.paged_decode_attention import paged_decode_attention_pallas
+from repro.kernels.paged_prefill_attention import (
+    paged_prefill_attention_pallas)
 from repro.kernels.psoft_matmul import psoft_matmul_pallas
 
 
@@ -154,6 +156,28 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
     return paged_decode_attention_pallas(
         q, k_pool, v_pool, page_table.astype(jnp.int32),
         lengths.astype(jnp.int32), interpret=interpret)
+
+
+def paged_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                            k_pool: jax.Array, v_pool: jax.Array,
+                            prefix_table: jax.Array, prefix_len: jax.Array, *,
+                            interpret: Optional[bool] = None) -> jax.Array:
+    """Chunked-prefill attention: causal suffix over a block-paged prefix.
+
+    q: (B, S, H, D); k/v: (B, S, KH, D) post-RoPE suffix projections; pools:
+    (P, pg, KH, D); prefix_table: (B, maxp); prefix_len: (B,) — not
+    necessarily page-aligned.  Prefix pages stream by scalar-prefetched page
+    id into an online-softmax accumulator; the (S x Spre) tile is never
+    materialized.  An empty table (maxp == 0) is padded to one fully-masked
+    trash column so the grid stays non-degenerate."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    if prefix_table.shape[1] == 0:
+        prefix_table = jnp.zeros(
+            (prefix_table.shape[0], 1), dtype=jnp.int32)
+        prefix_len = jnp.zeros_like(prefix_len)
+    return paged_prefill_attention_pallas(
+        q, k, v, k_pool, v_pool, prefix_table.astype(jnp.int32),
+        prefix_len.astype(jnp.int32), interpret=interpret)
 
 
 def blockdiag_rotate(x: jax.Array, q_flat_blocks: jax.Array, block: int,

@@ -74,6 +74,41 @@ def paged_decode_attention_ref(q, k_pool, v_pool, page_table, lengths,
     return out.reshape(b, h, d).astype(out_dtype)
 
 
+def paged_prefill_attention_ref(q, k, v, k_pool, v_pool, page_table,
+                                prefix_len, out_dtype=None):
+    """Suffix-prefill GQA attention over a block-paged prefix + causal suffix.
+
+    q: (B, S, H, D); k/v: (B, S, KH, D) suffix projections (post-RoPE);
+    pools: (P, pg, KH, D); page_table: (B, maxp) prefix page ids in position
+    order; prefix_len: (B,) valid prefix tokens (need not be page-aligned —
+    a chunk boundary can land mid-page).  Gathers each row's prefix pages
+    contiguous and materializes the full masked (S x (Spre + S)) score tile —
+    fp32 accumulate, the chunked-prefill oracle."""
+    out_dtype = out_dtype or q.dtype
+    b, s, h, d = q.shape
+    pg, kh = k_pool.shape[1], k_pool.shape[2]
+    maxp = page_table.shape[1]
+    flat = page_table.reshape(-1)
+    kp = jnp.take(k_pool, flat, axis=0).reshape(b, maxp * pg, kh, d)
+    vp = jnp.take(v_pool, flat, axis=0).reshape(b, maxp * pg, kh, d)
+    g = h // kh
+    qg = q.reshape(b, s, kh, g, d).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    kc = jnp.concatenate([kp, k], axis=1).astype(jnp.float32)
+    vc = jnp.concatenate([vp, v], axis=1).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bskgt", qg, kc) * scale
+    spre = maxp * pg
+    pre_ok = jnp.arange(spre)[None, None, :] < prefix_len.reshape(-1, 1, 1)
+    pre_ok = jnp.broadcast_to(pre_ok, (b, s, spre))
+    causal = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+    suf_ok = jnp.broadcast_to(causal[None], (b, s, s))
+    ok = jnp.concatenate([pre_ok, suf_ok], axis=-1)
+    scores = jnp.where(ok[:, :, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bskgt,btkd->bskgd", p, vc)
+    return out.reshape(b, s, h, d).astype(out_dtype)
+
+
 def blockdiag_rotate_ref(x: jax.Array, rots: jax.Array) -> jax.Array:
     """x: (M, d); rots: (d/b, b, b) — per-block input rotation (OFTv2)."""
     m, d = x.shape

@@ -136,11 +136,13 @@ def paged_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
     q/k/v: (B, S, H|KH, D) post-RoPE suffix projections; k_pref/v_pref:
     (B, Spre, KH, D) gathered prefix pages; prefix_len: (B,) valid prefix
-    tokens (page-aligned, so suffix row i sits at absolute position
-    prefix_len + i and intra-suffix causality is plain i >= j).  fp32
-    accumulation.  The (S × (Spre+S)) score tile is materialized — serving
-    prefill buckets are max_len-bounded; a chunked/Pallas prefix kernel is
-    the TPU follow-up."""
+    tokens — NOT necessarily page-aligned (a chunk boundary can land
+    mid-page; the mask cuts the partial page's tail exactly).  Suffix row i
+    sits at absolute position prefix_len + i so intra-suffix causality is
+    plain i >= j.  fp32 accumulation.  The (S × (Spre+S)) score tile is
+    materialized — this is the CPU/interpret reference path; the Pallas
+    prefix kernel (see :func:`paged_prefix_prefill_attention`) streams
+    prefix pages instead."""
     b, s, h, d = q.shape
     kh = k.shape[2]
     if expand_kv and kh != h:
@@ -164,6 +166,36 @@ def paged_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     vcat = jnp.concatenate([v_pref, v], axis=1).astype(jnp.float32)
     out = jnp.einsum("bskgt,btkd->bskgd", p, vcat)
     return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def paged_prefix_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                                   k_pool: jax.Array, v_pool: jax.Array,
+                                   prefix_table: jax.Array,
+                                   prefix_len: jax.Array,
+                                   expand_kv: bool = False,
+                                   use_kernel: Optional[bool] = None
+                                   ) -> jax.Array:
+    """Suffix-prefill attention taking the paged pools directly.
+
+    q: (B, S, H, D); k/v: (B, S, KH, D) post-RoPE suffix projections; pools:
+    (P, pg, KH, D); prefix_table: (B, maxp) aliased prefix page ids;
+    prefix_len: (B,) valid prefix tokens (any alignment).  On TPU the Pallas
+    prefix-prefill kernel streams prefix pages by scalar-prefetched page id
+    into an online-softmax accumulator — nothing proportional to Spre is
+    materialized, which is what makes page-sized chunked prefill cheap.  The
+    reference path gathers the pages and reuses
+    :func:`paged_prefill_attention` — bit-identical semantics."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    prefix_len = jnp.broadcast_to(jnp.asarray(prefix_len), (q.shape[0],))
+    if use_kernel:
+        from repro.kernels import ops
+        return ops.paged_prefill_attention(q, k, v, k_pool, v_pool,
+                                           prefix_table, prefix_len)
+    return paged_prefill_attention(q, k, v,
+                                   paged_gather(k_pool, prefix_table),
+                                   paged_gather(v_pool, prefix_table),
+                                   prefix_len, expand_kv=expand_kv)
 
 
 def paged_decode_attention(q: jax.Array, k_pool: jax.Array,

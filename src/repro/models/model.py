@@ -157,12 +157,12 @@ def attn_apply(params, x, cfg: ModelConfig, compute_dtype, causal=True,
         new_cache = {"k": kp, "v": vp}
         pre = cache["prefix_table"]
         if pre.shape[1] != 0:
-            # rows gather their prefix pages post-write; positions past
-            # prefix_len (own suffix pages, trash) mask to exact zeros
-            out = attention.paged_prefill_attention(
-                q, k, v, attention.paged_gather(kp, pre),
-                attention.paged_gather(vp, pre),
-                jnp.asarray(cache["prefix_len"]),
+            # rows read their prefix pages post-write; positions past
+            # prefix_len (own suffix pages, trash) mask to exact zeros.
+            # On TPU the Pallas prefix kernel streams the pages; the CPU
+            # path gathers and materializes the tile.
+            out = attention.paged_prefix_prefill_attention(
+                q, k, v, kp, vp, pre, jnp.asarray(cache["prefix_len"]),
                 expand_kv=_expand_kv_flag(cfg))
         # else: no aliased prefix anywhere in the batch — fall through to
         # the SAME chunked path as dense prefill (token-identity with the

@@ -4,4 +4,5 @@ from repro.serve.kv_cache import (  # noqa: F401
     OutOfPages, PagedKVCache, TRASH_PAGE)
 from repro.serve.sampling import (  # noqa: F401
     MAX_LOGPROBS, SamplingParams, TokenLogprobs)
-from repro.serve.scheduler import StreamScheduler  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    StreamScheduler, TokenCostModel)

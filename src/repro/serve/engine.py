@@ -70,7 +70,7 @@ from repro.obs import NOOP, NULL_SPAN, Tracker
 from repro.serve import sampling as sampling_lib
 from repro.serve.kv_cache import OutOfPages, PagedKVCache, TRASH_PAGE
 from repro.serve.sampling import SamplingParams, TokenLogprobs
-from repro.serve.scheduler import StreamScheduler
+from repro.serve.scheduler import StreamScheduler, TokenCostModel
 
 #: adapter name every request uses unless it asks for something else
 BASE_ADAPTER = "base"
@@ -90,6 +90,12 @@ _LINEAR_MODULES = frozenset(model_lib._MODULE_NAMES) - {"router"}
 _LEGACY_UNSET = object()
 
 
+def _has_deadline(r: "Request") -> bool:
+    """Whether ``r`` carries any SLO (new cost-basis ``deadline`` or the
+    deprecated step-basis ``deadline_steps``)."""
+    return r.deadline is not None or r.deadline_steps is not None
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -101,8 +107,19 @@ class Request:
     #: scheduling weight: higher-priority requests are admitted first and
     #: may preempt lower-priority running slots under page pressure
     priority: int = 0
-    #: SLO: finish within this many engine steps of arrival (None = no SLO)
+    #: DEPRECATED step-basis SLO: finish within this many engine steps of
+    #: arrival.  Kept working through the scheduler's
+    #: :class:`~repro.serve.scheduler.TokenCostModel` — the documented
+    #: mapping is ``deadline = deadline_steps * decode_step_cost`` (with the
+    #: default model, 1 cost unit == 1 engine step, so the numbers are
+    #: identical).  New code sets :attr:`deadline` instead.
     deadline_steps: Optional[int] = None
+    #: SLO on the engine's cost clock: finish within this many cost units
+    #: of arrival (None = no SLO).  Under the default
+    #: :class:`~repro.serve.scheduler.TokenCostModel` cost units are engine
+    #: steps; under a calibrated model they are wall-clock seconds.  Takes
+    #: precedence over the deprecated ``deadline_steps``.
+    deadline: Optional[float] = None
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     #: why the request completed: "stop" (emitted one of its
@@ -123,6 +140,21 @@ class Request:
     admit_step: Optional[int] = None
     finish_step: Optional[int] = None
     preemptions: int = 0
+    #: cost-clock stamps (engine-set): when the request entered the queue /
+    #: finished, on the scheduler's :class:`TokenCostModel` basis — the
+    #: wall-clock analogues of ``arrival_step`` / ``finish_step``
+    arrival_cost: float = 0.0
+    finish_cost: Optional[float] = None
+
+    def __post_init__(self):
+        if self.deadline_steps is not None:
+            warnings.warn(
+                "Request.deadline_steps is deprecated: deadlines run on the "
+                "scheduler's TokenCostModel cost clock now — set "
+                "Request.deadline instead (mapping: deadline = "
+                "deadline_steps * decode_step_cost; with the default cost "
+                "model the numbers are identical)",
+                DeprecationWarning, stacklevel=3)
 
     @property
     def queueing_delay(self) -> Optional[int]:
@@ -136,6 +168,10 @@ class Request:
     def slo_met(self) -> Optional[bool]:
         """Whether the request finished inside its deadline (None: no
         deadline was set; False also covers never-finished)."""
+        if self.deadline is not None:
+            if self.finish_cost is None:
+                return False
+            return self.finish_cost - self.arrival_cost <= self.deadline
         if self.deadline_steps is None:
             return None
         if self.finish_step is None:
@@ -208,7 +244,10 @@ class ServeEngine:
                  retain_prefix_cache: bool = True,
                  temperature=_LEGACY_UNSET, sample_seed: int = 0,
                  sampling: Optional[SamplingParams] = None,
-                 tracker: Optional[Tracker] = None):
+                 tracker: Optional[Tracker] = None,
+                 prefill_chunk_tokens: Optional[int] = None,
+                 cost_model: Optional[TokenCostModel] = None,
+                 bucket_multiple: Optional[int] = None):
         # serving config: every linear is a plain {"w"} (+bank) after merging
         self.cfg = dataclasses.replace(
             cfg, peft=PEFTConfig(method="none", target_modules=(),
@@ -265,10 +304,42 @@ class ServeEngine:
             self.kv = PagedKVCache(self.cfg, slots, max_len,
                                    page_size=page_size, num_pages=num_pages,
                                    retain_prefix_cache=retain_prefix_cache)
+        #: deadline-clock / step-budget basis (shared with the scheduler);
+        #: the default model makes cost units equal engine steps
+        self.cost_model = cost_model if cost_model is not None \
+            else TokenCostModel()
+        #: chunked prefill: prompts prefill at most this many tokens per
+        #: engine step, interleaved with decode (None = one-shot prefill)
+        self.prefill_chunk_tokens = (None if prefill_chunk_tokens is None
+                                     else int(prefill_chunk_tokens))
+        if self.prefill_chunk_tokens is not None:
+            if self.prefill_chunk_tokens < 1:
+                raise ValueError(
+                    f"prefill_chunk_tokens must be >= 1, got "
+                    f"{self.prefill_chunk_tokens}")
+            if cache_mode != "paged":
+                raise ValueError(
+                    "chunked prefill needs the paged KV cache (a partial "
+                    "prompt holds its completed chunks as pages) — use "
+                    "cache_mode='paged' or drop prefill_chunk_tokens")
+        #: prefill padding-bucket granularity; align it to the chunk/page
+        #: size so full chunks share one executable
+        self.bucket_multiple = (8 if bucket_multiple is None
+                                else int(bucket_multiple))
+        if self.bucket_multiple < 1:
+            raise ValueError(f"bucket_multiple must be >= 1, got "
+                             f"{self.bucket_multiple}")
 
         def _decode(p, b, c, positions, ids):
             with peft_registry.batched_adapter_ids(ids):
                 return model_lib.decode_step(p, b, c, positions, self.cfg)
+
+        #: prefill executables traced so far — incremented INSIDE the jitted
+        #: bodies, so it only moves when XLA actually compiles a new
+        #: (bucket, group-size, prefix-width) signature.  The no-recompile
+        #: test pins that chunking reuses executables instead of exploding
+        #: the compile cache (same pattern as sampling_lib.trace_count).
+        self._prefill_traces = 0
 
         def _prefill(p, b, lengths, ids):
             # moe_impl="dense": capacity dispatch couples rows through shared
@@ -276,11 +347,13 @@ class ServeEngine:
             # tokens); the dense impl keeps every row's compute independent
             # of its co-batch — the invariant bucket padding and mixed-
             # adapter token-identity rest on
+            self._prefill_traces += 1          # trace-time side effect
             with peft_registry.batched_adapter_ids(ids):
                 return model_lib.prefill(p, b, self.cfg, max_len,
                                          moe_impl="dense", lengths=lengths)
 
         def _prefill_paged(p, b, pools, pt, pre_pt, lengths, prefix, ids):
+            self._prefill_traces += 1          # trace-time side effect
             with peft_registry.batched_adapter_ids(ids):
                 cache = {"k": pools["k"], "v": pools["v"], "page_table": pt,
                          "prefix_table": pre_pt}
@@ -306,7 +379,16 @@ class ServeEngine:
         self.preemption_events: List[PreemptionEvent] = []
         #: streaming admission policy; run() pins it to strict FIFO,
         #: run_stream() reconfigures it per call
-        self.scheduler = StreamScheduler()
+        self.scheduler = StreamScheduler(cost_model=self.cost_model)
+        #: the run's cost clock (TokenCostModel units).  Unbudgeted, it is
+        #: exactly steps_to_cost(step) — the legacy step clock; budgeted,
+        #: each step advances by what it actually spent
+        self._cost_clock = 0.0
+        self._step_spent = 0.0
+        #: per-step (cost_spent, live_decode_slots) of the last run — the
+        #: deterministic decode-latency trace bench_streaming's p99 guard
+        #: reads (host-side floats only; no tracker involved)
+        self.last_run_step_costs: List[Tuple[float, int]] = []
         #: uids currently queued or active — duplicate uids would silently
         #: corrupt admission_log/preemption bookkeeping, so submit() raises
         self._inflight: set = set()
@@ -571,38 +653,76 @@ class ServeEngine:
         return bool(r.generated) and \
             r.generated[-1] in self._sampling_for(r).stop_token_ids
 
+    def prefill_trace_count(self) -> int:
+        """Prefill executables compiled so far (trace-time counter inside
+        the jitted prefill bodies) — the no-recompile pin for chunking."""
+        return self._prefill_traces
+
     # -- admission ---------------------------------------------------------
     def _bucket(self, plen: int) -> int:
-        """Prefill padding bucket.  Attention families right-pad to an
-        8-multiple (pads are never attended: logits read the true last token
-        and decode masks per-slot spans), so a handful of executables cover
-        all prompt lengths.  Recurrent families (SSM/hybrid) prefill at the
-        exact length — their scan states would absorb pad tokens."""
+        """Prefill padding bucket.  Attention families right-pad to a
+        ``bucket_multiple``-multiple (pads are never attended: logits read
+        the true last token and decode masks per-slot spans), so a handful
+        of executables cover all prompt lengths.  Default multiple is 8;
+        align it to ``prefill_chunk_tokens`` / the page size so every full
+        chunk lands in ONE bucket (one executable per group size).
+        Recurrent families (SSM/hybrid) prefill at the exact length — their
+        scan states would absorb pad tokens."""
         if self.cfg.family in ("ssm", "hybrid"):
             return plen
-        return min(self.max_len, ((plen + 7) // 8) * 8)
+        m = self.bucket_multiple
+        return min(self.max_len, ((plen + m - 1) // m) * m)
 
     @staticmethod
     def _resident_seq(r: Request) -> np.ndarray:
         """Tokens whose KV is resident for an active/suspended request: the
         prompt plus every generated token already fed back through the model
         (the latest sampled token hasn't been — it is the next decode
-        input, preserved in ``generated`` across suspend/resume)."""
+        input, preserved in ``generated`` across suspend/resume).  A slot
+        suspended MID-PREFILL has only its completed chunks resident —
+        chunks counted over the full target sequence, since a resumed
+        request may be mid-way through re-prefilling its decode tail."""
+        full = ServeEngine._target_seq(r)
+        if not getattr(r, "_prefill_done", True):
+            return full[:r._prefill_pos]
+        return full
+
+    @staticmethod
+    def _target_seq(r: Request) -> np.ndarray:
+        """Full sequence a (re)admission must make resident: the prompt
+        plus every already-decoded token — for a request suspended
+        MID-PREFILL this is more than :meth:`_resident_seq` (resume
+        re-aliases whatever chunks stayed resident and re-prefills the
+        rest)."""
         return np.concatenate([np.asarray(r.prompt, np.int32),
                                np.asarray(r.generated[:-1], np.int32)])
 
     def _record_admissions(self, step: int, group, next_tokens) -> None:
-        for j, (slot, r, pref, seq, resumed) in enumerate(group):
+        """Install one admission pass's slot fills.  ``group`` entries are
+        ``(slot, r, pref, seq, resumed, end, final)``: ``end`` is how many
+        of ``seq``'s tokens are resident after this prefill call and
+        ``final`` whether that is all of them — a chunked admission's first
+        chunk installs the request with prefill IN PROGRESS (no first token
+        yet; continuation chunks run via :meth:`_continue_prefills`).
+        ``next_tokens[j]`` is the prefill-sampled first token, or None for
+        rows that don't sample one (resumed or mid-prefill)."""
+        for j, (slot, r, pref, seq, resumed, end, final) in enumerate(group):
             others = tuple(q.uid for i, q in enumerate(self.active)
                            if q is not None and i != slot)
             self.active[slot] = r
-            first = False
-            if not resumed:
-                r.generated.append(int(next_tokens[j]))
-                if r.admit_step is None:
-                    first = True
-                    r.admit_step = step
-            self.positions[slot] = len(seq)
+            first = r.admit_step is None
+            if first:
+                r.admit_step = step
+            tok = next_tokens[j]
+            if tok is not None:
+                r.generated.append(int(tok))
+            if final:
+                r._prefill_done = True
+                self.positions[slot] = len(seq)
+            else:
+                r._prefill_done = False
+                r._prefill_pos = end
+                self.positions[slot] = 0
             ev = AdmissionEvent(step=step, slot=slot, uid=r.uid,
                                 adapter=r.adapter, resumed=resumed,
                                 prefix_tokens=int(pref),
@@ -613,15 +733,18 @@ class ServeEngine:
                 tr = self._tracker
                 s = self._obs_step
                 tr.event("engine/admission", dataclasses.asdict(ev), step=s)
-                if not resumed:
+                if tok is not None:
                     # the prefill-sampled first token of a fresh admission
                     # (decode tokens are counted in _observe_decode)
                     tr.count(f"engine/tokens/{r.adapter}", step=s)
                 if first:
                     tr.histogram("engine/queueing_delay", r.queueing_delay,
                                  step=s)
-                if self.scheduler.at_risk(r, step):
+                if self.scheduler.at_risk(r, self._cost_clock):
                     tr.count("scheduler/at_risk_admissions", step=s)
+                if final and self.prefill_chunk_tokens is not None:
+                    tr.histogram("engine/prefill_stall_steps",
+                                 step - r.admit_step, step=s)
 
     def _admit(self, step: int):
         """Fill every free slot from the scheduler.
@@ -638,6 +761,13 @@ class ServeEngine:
         free = [i for i in range(self.slots) if self.active[i] is None]
         if not free or not self.scheduler.has_work():
             return
+        cm = self.cost_model
+        if (cm.step_budget is not None
+                and self._step_spent >= cm.step_budget
+                and any(r is not None for r in self.active)):
+            # step budget spent and other work is progressing: defer new
+            # admissions (an idle engine always admits — no starvation)
+            return
         tree = self._banked_tree()
         if self.cache_mode == "paged":
             self._admit_paged(tree, free, step)
@@ -646,12 +776,14 @@ class ServeEngine:
 
     def _admit_dense(self, tree, free, step: int):
         # dense slots always fit: admit straight down the policy order
+        # (entries carry the (end, final) chunk-plan tail for
+        # _record_admissions — dense prefill is always one-shot/final)
         admitted = []
         while free and self.scheduler.has_work():
-            r, _resumed = self.scheduler.window(step)[0]
+            r, _resumed = self.scheduler.window(self._cost_clock)[0]
             self.scheduler.remove(r)
-            admitted.append((free.pop(0), r, 0,
-                             np.asarray(r.prompt, np.int32), False))
+            seq = np.asarray(r.prompt, np.int32)
+            admitted.append((free.pop(0), r, 0, seq, False, len(seq), True))
         groups: Dict[int, list] = {}
         for entry in admitted:
             groups.setdefault(self._bucket(len(entry[3])), []).append(entry)
@@ -659,10 +791,12 @@ class ServeEngine:
             toks = np.zeros((len(group), bucket), np.int32)
             lens = np.zeros((len(group),), np.int32)
             ids = np.zeros((len(group),), np.int32)
-            for j, (slot, r, _pref, seq, _res) in enumerate(group):
+            for j, (slot, r, _pref, seq, _res, _end, _fin) in \
+                    enumerate(group):
                 toks[j, :len(seq)] = seq
                 lens[j] = len(seq)
                 ids[j] = self._adapter_id(r.adapter)
+            self._step_spent += self.cost_model.prefill_cost(int(lens.sum()))
             with self._tracker.time_block("engine/prefill_s",
                                           step=self._obs_step):
                 logits, cache = self._prefill(
@@ -670,7 +804,8 @@ class ServeEngine:
                     jnp.asarray(ids))
             nxt = self._sample_rows(logits[:, -1, :self.cfg.vocab_size],
                                     [e[1] for e in group])
-            for j, (slot, r, _pref, _seq, _res) in enumerate(group):
+            for j, (slot, r, _pref, _seq, _res, _end, _fin) in \
+                    enumerate(group):
                 self._install_cache(slot, cache, j)
             self._record_admissions(step, group, nxt)
 
@@ -707,9 +842,9 @@ class ServeEngine:
                 continue
             if occ.priority < r.priority or (
                     occ.priority == r.priority
-                    and occ.deadline_steps is None
-                    and r.deadline_steps is not None):
-                cands.append((occ.priority, -sched.slack(occ, step), j))
+                    and not _has_deadline(occ) and _has_deadline(r)):
+                cands.append((occ.priority,
+                              -sched.slack(occ, self._cost_clock), j))
         return [c[-1] for c in sorted(cands)]
 
     def _pick_decode_victim(self, step: int) -> Optional[int]:
@@ -718,7 +853,7 @@ class ServeEngine:
         priority, then most deadline slack, then most recently admitted
         (LIFO preserves the oldest invested work)."""
         sched = self.scheduler
-        cands = [(occ.priority, -sched.slack(occ, step),
+        cands = [(occ.priority, -sched.slack(occ, self._cost_clock),
                   -(occ.admit_step or 0), j)
                  for j, occ in enumerate(self.active) if occ is not None]
         return min(cands)[-1] if cands else None
@@ -734,24 +869,30 @@ class ServeEngine:
         decode grows pages on demand via ``ensure_position`` instead of
         reserving the worst case up front."""
         kv = self.kv
-        seq = self._resident_seq(r) if resumed \
+        seq = self._target_seq(r) if resumed \
             else np.asarray(r.prompt, np.int32)
         reserve = None if self.scheduler.preempt \
             else min(len(r.prompt) + r.max_new_tokens, self.max_len)
+        # chunked + prompt-only reservation: commit only the aliased prefix
+        # plus the first chunk's pages now; later chunks grow the table via
+        # ensure_position — footprint follows prefill PROGRESS, not the
+        # one-shot worst case
+        alloc = self.prefill_chunk_tokens if reserve is None else None
         while True:
             try:
                 if resumed:
                     prefix = kv.resume_slot(
                         free[0], seq, r.adapter, reserve_tokens=reserve,
-                        pin=getattr(r, "_kv_pin", None))
+                        alloc_tokens=alloc, pin=getattr(r, "_kv_pin", None))
                     r._kv_pin = None
                 else:
                     prefix = kv.admit(free[0], seq, r.adapter,
-                                      reserve_tokens=reserve)
+                                      reserve_tokens=reserve,
+                                      alloc_tokens=alloc)
                 return prefix, seq
             except OutOfPages:
                 if not (self.scheduler.preempt
-                        and self.scheduler.at_risk(r, step)):
+                        and self.scheduler.at_risk(r, self._cost_clock)):
                     return None
                 victims = self._eligible_victims(r, step, frozen)
                 if not victims:
@@ -769,13 +910,12 @@ class ServeEngine:
                 free.append(victims[0])
 
     def _admit_paged(self, tree, free, step: int):
-        kv = self.kv
         admitted = []          # (slot, request, prefix, seq, resumed)
         frozen = set()         # slots filled this pass: not preemptible
         while free and self.scheduler.has_work():
             pick = None
             skipped = 0
-            for r, resumed in self.scheduler.window(step):
+            for r, resumed in self.scheduler.window(self._cost_clock):
                 res = self._try_admit_pages(free, r, resumed, step, frozen)
                 if res is not None:
                     pick = (r, resumed) + res
@@ -793,14 +933,39 @@ class ServeEngine:
             admitted.append((slot, r, prefix, seq, resumed))
         if not admitted:
             return
-        # group by SUFFIX bucket: rows aliasing a resident prefix (shared
-        # pages or a resumed request's retained KV) prefill only their
-        # remaining tokens
+        groups = self._run_prefill_groups(tree, admitted)
+        for group, nxt in groups:
+            self._record_admissions(step, group, nxt)
+
+    def _chunk_plan(self, prefix: int, total: int) -> Tuple[int, bool]:
+        """How far this prefill call advances a row whose first ``prefix``
+        of ``total`` tokens are resident: ``(end, final)``.  One-shot
+        engines always finish; chunked engines stop after
+        ``prefill_chunk_tokens`` suffix tokens."""
+        chunk = self.prefill_chunk_tokens
+        if chunk is None or total - prefix <= chunk:
+            return total, True
+        return prefix + chunk, False
+
+    def _run_prefill_groups(self, tree, entries):
+        """Run one prefill call per suffix bucket over ``entries`` =
+        ``(slot, r, prefix, seq, resumed)`` rows, chunking each row via
+        :meth:`_chunk_plan`.  Rows aliasing a resident prefix (shared
+        pages, a resumed request's retained KV, or a prior CHUNK of their
+        own prompt) prefill only their remaining tokens.  Returns
+        ``[(group, next_tokens)]`` with entries extended to
+        ``(..., end, final)``; a row samples its first token only on its
+        final chunk and only if it never sampled one (fresh admissions —
+        resumed requests' next token predates their suspension)."""
+        kv = self.kv
+        plans = [(slot, r, prefix, seq, resumed) + self._chunk_plan(
+                     prefix, len(seq))
+                 for slot, r, prefix, seq, resumed in entries]
         groups: Dict[int, list] = {}
-        for entry in admitted:
-            _slot, _r, prefix, seq, _res = entry
-            groups.setdefault(self._bucket(len(seq) - prefix),
-                              []).append(entry)
+        for entry in plans:
+            _slot, _r, prefix, _seq, _res, end, _fin = entry
+            groups.setdefault(self._bucket(end - prefix), []).append(entry)
+        out = []
         for bucket, group in groups.items():
             g = len(group)
             toks = np.zeros((g, bucket), np.int32)
@@ -808,8 +973,9 @@ class ServeEngine:
             prefs = np.zeros((g,), np.int32)
             ids = np.zeros((g,), np.int32)
             rows_pt = np.zeros((g, kv.pages_per_slot), np.int32)
-            for j, (slot, r, prefix, seq, _res) in enumerate(group):
-                suffix = seq[prefix:]
+            for j, (slot, r, prefix, seq, _res, end, _fin) in \
+                    enumerate(group):
+                suffix = seq[prefix:end]
                 toks[j, :len(suffix)] = suffix
                 lens[j] = len(suffix)
                 prefs[j] = prefix
@@ -818,9 +984,11 @@ class ServeEngine:
             # prefix-table width is 0 (no aliasing in the group: the prefill
             # reduces to the exact dense chunked path) or full — two
             # executables per (bucket, group-size), not one per distinct
-            # prefix length; rows gather their whole table, masked by
-            # prefix_len
+            # prefix length; rows read their whole table, masked by
+            # prefix_len (NOT page-aligned for mid-page chunk boundaries —
+            # the kernel/reference mask both handle that exactly)
             n_pref = kv.pages_per_slot if prefs.max() else 0
+            self._step_spent += self.cost_model.prefill_cost(int(lens.sum()))
             with self._tracker.time_block("engine/prefill_s",
                                           step=self._obs_step):
                 logits, new_pools = self._prefill_paged(
@@ -828,17 +996,102 @@ class ServeEngine:
                     jnp.asarray(rows_pt), jnp.asarray(rows_pt[:, :n_pref]),
                     jnp.asarray(lens), jnp.asarray(prefs), jnp.asarray(ids))
             kv.pools = new_pools
-            # a resumed request's next token was sampled before suspension:
-            # its row is passed as None, so the tail-rebuild logits are
-            # discarded and (counter-based RNG) no later draw shifts
-            toks_out = self._sample_rows(
-                logits[:, -1, :self.cfg.vocab_size],
-                [None if e[4] else e[1] for e in group])
-            nxt = [None if group[j][4] else int(toks_out[j])
-                   for j in range(g)]
-            for slot, r, _pref, seq, _res in group:
-                kv.commit_prompt(slot, seq, r.adapter)
-            self._record_admissions(step, group, nxt)
+            # rows that don't sample (mid-prefill, or resumed — their next
+            # token was sampled before suspension) are passed as None, so
+            # their logits are discarded and (counter-based RNG) no later
+            # draw shifts
+            sample_for = [r if (fin and not r.generated) else None
+                          for _s, r, _p, _sq, _res, _e, fin in group]
+            if any(q is not None for q in sample_for):
+                toks_out = self._sample_rows(
+                    logits[:, -1, :self.cfg.vocab_size], sample_for)
+                nxt = [None if sample_for[j] is None else int(toks_out[j])
+                       for j in range(g)]
+            else:
+                nxt = [None] * g
+            for slot, r, _pref, seq, _res, end, _fin in group:
+                kv.commit_prompt(slot, seq[:end], r.adapter)
+            if self._obs and self.prefill_chunk_tokens is not None:
+                self._tracker.count("engine/prefill_chunks", g,
+                                    step=self._obs_step)
+            out.append((group, nxt))
+        return out
+
+    def _any_decodable(self) -> bool:
+        return any(r is not None and getattr(r, "_prefill_done", True)
+                   for r in self.active)
+
+    def _continue_prefills(self, tree, step: int) -> None:
+        """Advance every mid-prefill slot by one chunk (budget permitting).
+
+        Chunks are budget-gated like admissions, but at least one chunk
+        always runs when nothing else can make progress — a long prompt
+        never deadlocks on its own budget.  A chunk whose pages don't fit
+        suspends the preferred victim (possibly the mid-prefill slot
+        itself: its completed chunks park as retained pages and resume
+        re-prefills only what eviction takes) or, without preemption,
+        simply stalls until running slots free pages."""
+        if self.prefill_chunk_tokens is None:
+            return
+        cm = self.cost_model
+        entries = []
+        for slot in range(self.slots):
+            r = self.active[slot]
+            if r is None or getattr(r, "_prefill_done", True):
+                continue
+            if (cm.step_budget is not None
+                    and self._step_spent >= cm.step_budget
+                    and (entries or self._any_decodable())):
+                break
+            # target is the full make-resident sequence, not just the
+            # prompt: a resumed request re-prefilling its evicted DECODE
+            # tail in chunks continues past len(prompt)
+            target = self._target_seq(r)
+            end, _fin = self._chunk_plan(r._prefill_pos, len(target))
+            ok = False
+            while self.active[slot] is not None:
+                try:
+                    self.kv.ensure_position(slot, end - 1)
+                    ok = True
+                    break
+                except OutOfPages:
+                    if not self.scheduler.preempt:
+                        break              # stall: retry next step
+                    victim = self._pick_decode_victim(step)
+                    if victim is None:
+                        break
+                    self._suspend(victim, step)
+            if ok and self.active[slot] is not None:
+                entries.append((slot, r, r._prefill_pos, target, False))
+        # a later slot's victim pick may have suspended an earlier entry
+        entries = [e for e in entries if self.active[e[0]] is e[1]]
+        if not entries:
+            return
+        for group, nxt in self._run_prefill_groups(tree, entries):
+            self._finish_chunks(step, group, nxt)
+
+    def _finish_chunks(self, step: int, group, next_tokens) -> None:
+        """Book a continuation pass's results (the admission-time analogue
+        is :meth:`_record_admissions`; continuations emit no
+        AdmissionEvent — the slot was filled when its first chunk ran)."""
+        for j, (slot, r, _pref, seq, _res, end, final) in enumerate(group):
+            tok = next_tokens[j]
+            if tok is not None:
+                r.generated.append(int(tok))
+            if final:
+                r._prefill_done = True
+                self.positions[slot] = len(seq)
+            else:
+                r._prefill_pos = end
+                self.positions[slot] = 0
+            if self._obs:
+                tr = self._tracker
+                s = self._obs_step
+                if tok is not None:
+                    tr.count(f"engine/tokens/{r.adapter}", step=s)
+                if final:
+                    tr.histogram("engine/prefill_stall_steps",
+                                 step - r.admit_step, step=s)
 
     def _install_cache(self, slot: int, cache, j: int):
         """Dense mode only: copy prefill row ``j`` into slot ``slot`` of the
@@ -904,8 +1157,22 @@ class ServeEngine:
                         f"write would corrupt live KV")
         self.last_decode_positions = positions.copy()
         if self.cache_mode == "paged":
+            # mid-prefill slots ride the decode batch as ghosts too (their
+            # positions stay 0, no token sampled) — but unlike dead slots
+            # their table row maps REAL pages (completed chunks, possibly
+            # aliased), so the ghost write at position 0 must be redirected
+            # to trash in the decode call's table copy
+            inprog = [i for i in range(self.slots)
+                      if self.active[i] is not None
+                      and not getattr(self.active[i], "_prefill_done", True)]
+            if inprog:
+                masked = self.kv.tables.copy()
+                masked[inprog] = TRASH_PAGE
+                table = jnp.asarray(masked)
+            else:
+                table = self.kv.table_jax()
             cache = {"k": self.kv.pools["k"], "v": self.kv.pools["v"],
-                     "page_table": self.kv.table_jax()}
+                     "page_table": table}
             logits, new_cache = self._decode(
                 tree, {"tokens": jnp.asarray(toks)}, cache,
                 jnp.asarray(positions), jnp.asarray(ids))
@@ -924,6 +1191,7 @@ class ServeEngine:
         r.done = True
         r.finish_reason = reason
         r.finish_step = step
+        r.finish_cost = self._cost_clock
         finished.append(r)
         self._inflight.discard(r.uid)
         self.active[slot] = None
@@ -950,7 +1218,7 @@ class ServeEngine:
             return
         s = self._obs_step
         self._tracker.count("engine/finish/truncated", step=s)
-        if r.deadline_steps is not None:
+        if _has_deadline(r):
             self._tracker.count("engine/slo_missed", step=s)
 
     def _finish_admitted(self, finished: List[Request], step: int) -> None:
@@ -1030,9 +1298,18 @@ class ServeEngine:
         request.finish_reason = None
         request.admit_step = None
         request.finish_step = None
+        request.finish_cost = None
         request.preemptions = 0
+        request._prefill_done = True
+        request._prefill_pos = 0
         request.arrival_step = (self._step if arrival_step is None
                                 else arrival_step)
+        # cost-clock arrival stamp: mid-run submissions (trace injections
+        # included) anchor at the run's live clock; pre-run submissions
+        # convert their step stamp (clock starts at steps_to_cost(0) == 0)
+        request.arrival_cost = (
+            self._cost_clock if self._step
+            else self.cost_model.steps_to_cost(request.arrival_step))
         self._inflight.add(request.uid)
         self.scheduler.push(request)
 
@@ -1105,28 +1382,48 @@ class ServeEngine:
         max_live = 0
         next_arrival = 0
         preempted_before = len(self.preemption_events)
+        cm = self.cost_model
+        self._cost_clock = 0.0
+        self._step_spent = 0.0
+        self.last_run_step_costs = []
         while (next_arrival < len(trace) or self.scheduler.has_work()
                 or any(r is not None for r in self.active)) \
                 and steps < max_steps:
             steps += 1
             self._step = steps
             self._obs_step += 1
+            # advance the cost clock: unbudgeted it IS the step counter in
+            # cost units (the legacy clock, bit-for-bit); budgeted it
+            # advances by what the previous step actually spent (a decode
+            # step's cost at minimum — the clock never stalls)
+            if cm.step_budget is None:
+                self._cost_clock = cm.steps_to_cost(steps)
+            else:
+                self._cost_clock += max(self._step_spent,
+                                        cm.decode_step_cost)
+            self._step_spent = 0.0
             while (next_arrival < len(trace)
                     and trace[next_arrival][0] <= steps):
                 s, r = trace[next_arrival]
                 self._pending_trace_uids.discard(r.uid)
                 self.submit(r, arrival_step=s, _validated=True)
                 next_arrival += 1
+            # mid-prefill slots advance a chunk before new admissions
+            # compete for the step's budget
+            self._continue_prefills(tree, steps)
             self._admit(steps)
             # a prefill-sampled first token may already be a stop id (or
             # the whole budget): finish + refill before decoding
             self._finish_admitted(finished, steps)
-            live = [i for i, r in enumerate(self.active) if r is not None]
-            max_live = max(max_live, len(live))
+            busy = [i for i, r in enumerate(self.active) if r is not None]
+            live = [i for i in busy
+                    if getattr(self.active[i], "_prefill_done", True)]
+            max_live = max(max_live, len(busy))
             if not live:
-                if (self.cache_mode == "paged" and self.scheduler.has_work()
+                if (not busy and self.cache_mode == "paged"
+                        and self.scheduler.has_work()
                         and next_arrival >= len(trace)):
-                    head = self.scheduler.window(steps)[0][0]
+                    head = self.scheduler.window(self._cost_clock)[0][0]
                     raise self.kv.oom(
                         f"request {head.uid} (prompt {len(head.prompt)} "
                         f"tokens) cannot fit an idle page pool of "
@@ -1135,6 +1432,7 @@ class ServeEngine:
                         f"({self.kv.pages_resident()} resident, "
                         f"{self.kv.pages_resident() - self.kv.pages_in_use()}"
                         f" retained)")
+                self.last_run_step_costs.append((self._step_spent, 0))
                 continue
             # the decode hot path makes ZERO tracker calls under the
             # default NoopTracker (gated span + gated _observe_decode):
@@ -1146,8 +1444,15 @@ class ServeEngine:
             with span:
                 rows, live = self._decode_live(tree, live, steps)
                 if live:
-                    toks = self._sample_rows(
-                        rows, [self.active[i] for i in range(self.slots)])
+                    # mid-prefill slots ride the batch as ghosts: None rows
+                    # draw no RNG and return no token (counter-based
+                    # sampling stays aligned with the one-shot engine)
+                    reqs: List[Optional[Request]] = [None] * self.slots
+                    for i in live:
+                        reqs[i] = self.active[i]
+                    toks = self._sample_rows(rows, reqs)
+            if live:
+                self._step_spent += cm.decode_step_cost
             if self._obs and live:
                 self._observe_decode(live)
             for i in live:
@@ -1161,6 +1466,11 @@ class ServeEngine:
                 elif (len(r.generated) >= r.max_new_tokens
                         or self.positions[i] >= self.max_len - 1):
                     self._finish_slot(i, finished, steps)
+            if self._obs and cm.step_budget is not None:
+                self._tracker.gauge("engine/step_budget_utilization",
+                                    self._step_spent / cm.step_budget,
+                                    step=self._obs_step)
+            self.last_run_step_costs.append((self._step_spent, len(live)))
         #: engine iterations the last run took — the deterministic
         #: wave-serialization metric (a wave engine pays ~one full
         #: prefill+decode pass per adapter switch; per-slot batching doesn't)
@@ -1215,4 +1525,6 @@ class ServeEngine:
                 finished.append(r)
         self._pending_trace_uids = set()
         self._step = 0
+        self._cost_clock = 0.0
+        self._step_spent = 0.0
         return finished

@@ -268,7 +268,8 @@ class PagedKVCache:
 
     # -- slot lifecycle ----------------------------------------------------
     def admit(self, slot: int, prompt: np.ndarray, adapter_key: str,
-              reserve_tokens: int = None) -> int:
+              reserve_tokens: int = None,
+              alloc_tokens: Optional[int] = None) -> int:
         """Build ``slot``'s page table for ``prompt``: alias every resident
         shared-prefix page, allocate fresh pages for the rest.
 
@@ -278,6 +279,11 @@ class PagedKVCache:
         so a mid-decode page-boundary crossing can never hit an empty pool;
         the preempting streaming engine reserves only the prompt and grows
         via :meth:`ensure_position`, suspending a slot on pool pressure.
+        ``alloc_tokens`` (chunked prefill; only with the default
+        ``reserve_tokens``) caps the up-front allocation at the aliased
+        prefix plus that many suffix tokens — later chunks grow the table
+        through :meth:`ensure_position`, so a long prompt's footprint
+        follows its prefill progress instead of landing all at once.
 
         Returns the aliased prefix length in TOKENS (a page multiple, capped
         so >= 1 suffix token remains to prefill).  Raises :class:`OutOfPages`
@@ -291,7 +297,6 @@ class PagedKVCache:
                 f"{self.pages_per_slot * self.page_size}")
         reserve = n if reserve_tokens is None else max(n, reserve_tokens)
         reserve = min(reserve, self.pages_per_slot * self.page_size)
-        need = -(-reserve // self.page_size)
         hashes = self._page_hashes(prompt, adapter_key)
         max_share = (n - 1) // self.page_size
         shared: List[int] = []
@@ -301,6 +306,13 @@ class PagedKVCache:
             if p is None:
                 break
             shared.append(p)
+        if alloc_tokens is not None and reserve_tokens is None:
+            # chunked prefill: fresh pages for the first chunk only (the
+            # cap keeps >= 1 fresh page since alloc_tokens >= 1, so the
+            # aliased-prefix cap below is unaffected)
+            reserve = min(reserve,
+                          len(shared) * self.page_size + alloc_tokens)
+        need = -(-reserve // self.page_size)
         # acquire the aliases BEFORE allocating fresh pages: a retained
         # (refcount-0) prefix page sits in the eviction pool, and _alloc
         # could otherwise evict and re-hand-out the very page being aliased
@@ -416,6 +428,7 @@ class PagedKVCache:
 
     def resume_slot(self, slot: int, tokens: np.ndarray, adapter_key: str,
                     reserve_tokens: int = None,
+                    alloc_tokens: Optional[int] = None,
                     pin: Optional[int] = None) -> int:
         """Rebuild a suspended slot's page table for its full sequence: an
         :meth:`admit` of ``tokens`` (so every still-resident page is
@@ -426,7 +439,8 @@ class PagedKVCache:
         (the evicted tail).  On failure (:class:`OutOfPages`) the pin stays
         outstanding."""
         prefix = self.admit(slot, tokens, adapter_key,
-                            reserve_tokens=reserve_tokens)
+                            reserve_tokens=reserve_tokens,
+                            alloc_tokens=alloc_tokens)
         if pin is not None:
             self.release_pin(pin)
         self.stats["resumes"] += 1

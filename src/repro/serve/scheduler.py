@@ -12,9 +12,13 @@ the resume lane.
 resumed-first, submission order)``:
 
 * higher ``Request.priority`` first;
-* among equal priorities, smaller *slack* first — slack is the number of
-  engine steps a request can still afford to wait and finish inside its
-  ``deadline_steps`` SLO (requests without a deadline have infinite slack);
+* among equal priorities, smaller *slack* first — slack is how much of the
+  :class:`TokenCostModel` cost clock a request can still afford to wait and
+  finish inside its deadline (wall-clock ``Request.deadline``, or the
+  deprecated step-basis ``deadline_steps`` converted through the cost
+  model; requests without a deadline have infinite slack).  The default
+  cost model makes cost units equal engine steps, reproducing the
+  historical step-based policy exactly;
 * preempted requests outrank fresh arrivals at equal priority/slack (their
   prefill work is already invested and mostly resident);
 * FIFO submission order breaks all remaining ties, so with uniform
@@ -36,12 +40,75 @@ on behalf of at-risk candidates (see ``docs/serving.md``).
 from __future__ import annotations
 
 import math
+from dataclasses import dataclass
 from typing import List, Optional, Tuple, TYPE_CHECKING
 
 from repro.obs import NOOP, Tracker
 
 if TYPE_CHECKING:                                    # pragma: no cover
     from repro.serve.engine import Request
+
+
+@dataclass(frozen=True)
+class TokenCostModel:
+    """Estimated cost of engine work, in abstract *cost units*.
+
+    The scheduler's deadline clock runs on these units rather than raw
+    engine steps: one decode step costs ``decode_step_cost`` and prefilling
+    ``n`` prompt tokens costs ``prefill_fixed_cost + n *
+    prefill_token_cost``.  The defaults (decode step = 1, prefill free)
+    make the cost clock *numerically identical* to the legacy engine-step
+    clock, so every pre-existing ``deadline_steps`` number keeps meaning
+    exactly what it meant — that is the back-compat shim.  Calibrate the
+    costs in seconds (:meth:`calibrate`) and the same clock becomes a
+    wall-clock SLO basis.
+
+    ``step_budget``: optional cost ceiling per engine step.  When set, the
+    engine chunk-prefills only while the step's accumulated cost stays
+    under budget (always making at least one chunk of progress), so long
+    prompts can't monopolize a step that live decodes are also paying for.
+    ``None`` = unbudgeted: admission prefills whole prompts in one shot
+    (the legacy schedule).
+    """
+
+    decode_step_cost: float = 1.0
+    prefill_token_cost: float = 0.0
+    prefill_fixed_cost: float = 0.0
+    step_budget: Optional[float] = None
+
+    def __post_init__(self):
+        if self.decode_step_cost <= 0:
+            raise ValueError("decode_step_cost must be > 0, got "
+                             f"{self.decode_step_cost}")
+        if self.prefill_token_cost < 0 or self.prefill_fixed_cost < 0:
+            raise ValueError("prefill costs must be >= 0")
+        if self.step_budget is not None and self.step_budget <= 0:
+            raise ValueError(f"step_budget must be > 0, got "
+                             f"{self.step_budget}")
+
+    def steps_to_cost(self, steps: float) -> float:
+        """Engine-step count → cost units (the deadline_steps mapping)."""
+        return steps * self.decode_step_cost
+
+    def cost_to_steps(self, cost: float) -> float:
+        return cost / self.decode_step_cost
+
+    def prefill_cost(self, tokens: int) -> float:
+        """Cost of one prefill call over ``tokens`` suffix tokens."""
+        return self.prefill_fixed_cost + tokens * self.prefill_token_cost
+
+    @classmethod
+    def calibrate(cls, decode_step_s: float, prefill_token_s: float,
+                  prefill_fixed_s: float = 0.0,
+                  step_budget_s: Optional[float] = None) -> "TokenCostModel":
+        """Build a wall-clock cost model from measured per-step seconds
+        (e.g. from the ``engine/decode_s`` / ``engine/prefill_s`` tracker
+        spans).  Cost units are then seconds and ``Request.deadline`` is a
+        wall-clock SLO."""
+        return cls(decode_step_cost=decode_step_s,
+                   prefill_token_cost=prefill_token_s,
+                   prefill_fixed_cost=prefill_fixed_s,
+                   step_budget=step_budget_s)
 
 
 class StreamScheduler:
@@ -55,11 +122,15 @@ class StreamScheduler:
     """
 
     def __init__(self, lookahead: int = 4, preempt: bool = True,
-                 risk_margin: int = 2):
+                 risk_margin: int = 2,
+                 cost_model: Optional[TokenCostModel] = None):
         self.configure(lookahead, preempt, risk_margin)
         self._pending: List["Request"] = []    # submission order
         self._resume: List["Request"] = []     # suspension order
         self._stamp = 0                        # total submission counter
+        #: deadline-clock basis; the default model makes cost units equal
+        #: engine steps, so passing raw step counts as ``now`` stays exact
+        self.cost_model = cost_model or TokenCostModel()
         #: metrics backend (repro.obs) — the engine shares its own; queue
         #: depth is gauged per admission pass, submissions are counted
         self.tracker: Tracker = NOOP
@@ -110,38 +181,74 @@ class StreamScheduler:
         return out
 
     # -- policy ------------------------------------------------------------
-    def slack(self, request: "Request", step: int) -> float:
-        """Engine steps this request can still wait and make its deadline:
-        ``(arrival + deadline) - step - remaining_work``.  Remaining work is
-        one step per token left to generate (prefill rides the admission
-        step) — an upper bound: a ``stop_token_ids`` hit finishes sooner,
-        which only ever improves true slack, so early-finishing requests
-        are never preempted for on behalf of a request that didn't need it.
-        Infinite for requests without a deadline."""
+    @staticmethod
+    def _now(now: Optional[float], step: Optional[float]) -> float:
+        """Back-compat shim: legacy callers pass ``step=`` (raw engine
+        steps); under the default cost model the two clocks are identical,
+        so the step count is accepted as the cost clock directly."""
+        if now is None:
+            if step is None:
+                raise TypeError("missing clock argument 'now'")
+            return step
+        return now
+
+    def slack(self, request: "Request", now: Optional[float] = None, *,
+              step: Optional[float] = None) -> float:
+        """Cost units this request can still wait and make its deadline:
+        ``(arrival + deadline) - now - remaining_work``.  ``now`` is the
+        engine's cost clock (``TokenCostModel``); under the default model
+        cost units == engine steps, so legacy callers passing a raw step
+        count get the historical step-based slack bit-for-bit.  Remaining
+        work is one decode step's cost per token left to generate (prefill
+        rides the admission step) — an upper bound: a ``stop_token_ids``
+        hit finishes sooner, which only ever improves true slack, so
+        early-finishing requests are never preempted for on behalf of a
+        request that didn't need it.  Infinite for requests without a
+        deadline.
+
+        Requests carry either the new cost-basis ``deadline`` or the
+        deprecated step-basis ``deadline_steps``; the latter converts
+        through :meth:`TokenCostModel.steps_to_cost` (so the documented
+        mapping is ``deadline = deadline_steps * decode_step_cost``,
+        anchored at ``arrival_step``)."""
+        now = self._now(now, step)
+        cm = self.cost_model
+        remaining = request.remaining_tokens * cm.decode_step_cost
+        deadline = getattr(request, "deadline", None)
+        if deadline is not None:
+            arrival = getattr(request, "arrival_cost", None)
+            if arrival is None:
+                arrival = cm.steps_to_cost(request.arrival_step)
+            return (arrival + deadline) - now - remaining
         if request.deadline_steps is None:
             return math.inf
-        return (request.arrival_step + request.deadline_steps) \
-            - step - request.remaining_tokens
+        return cm.steps_to_cost(request.arrival_step
+                                + request.deadline_steps) - now - remaining
 
-    def at_risk(self, request: "Request", step: int) -> bool:
-        return self.slack(request, step) <= self.risk_margin
+    def at_risk(self, request: "Request", now: Optional[float] = None, *,
+                step: Optional[float] = None) -> bool:
+        return self.slack(request, self._now(now, step)) \
+            <= self.cost_model.steps_to_cost(self.risk_margin)
 
-    def _key(self, request: "Request", step: int, resumed: bool):
-        return (-request.priority, self.slack(request, step),
+    def _key(self, request: "Request", now: float, resumed: bool):
+        return (-request.priority, self.slack(request, now),
                 0 if resumed else 1, request._sched_stamp)
 
-    def window(self, step: int) -> List[Tuple["Request", bool]]:
+    def window(self, now: Optional[float] = None, *,
+               step: Optional[float] = None) -> List[Tuple["Request", bool]]:
         """Policy-ordered admission candidates: the whole resume lane plus
         the first ``1 + lookahead`` pending requests, as ``(request,
-        resumed)`` pairs."""
-        # gauge at step=None (tracker's last step): ``step`` here is the
-        # per-RUN engine step, which resets across runs — the tracker's
-        # step domain is the engine's cumulative counter
+        resumed)`` pairs.  ``now`` is the engine's cost clock (legacy
+        callers may pass ``step=`` — see :meth:`slack`)."""
+        now = self._now(now, step)
+        # gauge at step=None (tracker's last step): the engine's cost clock
+        # resets across runs — the tracker's step domain is the engine's
+        # cumulative counter
         if not self.tracker.is_noop:
             self.tracker.gauge("scheduler/queue_depth", len(self))
             self.tracker.gauge("scheduler/resume_lane_depth",
                                len(self._resume))
         cands = [(r, True) for r in self._resume]
         cands += [(r, False) for r in self._pending[:1 + self.lookahead]]
-        cands.sort(key=lambda c: self._key(c[0], step, c[1]))
+        cands.sort(key=lambda c: self._key(c[0], now, c[1]))
         return cands

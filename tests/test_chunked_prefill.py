@@ -1,0 +1,337 @@
+"""Chunked prefill: token identity vs one-shot under arbitrary chunk
+boundaries, mid-prefill preemption/resume, the step-budgeted cost clock,
+the prefix-prefill kernel vs its oracle, and the no-recompile executable
+pin for the chunked prefill path."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ops, ref
+from repro.models import model as model_lib
+from repro.serve import Request, ServeEngine, StreamScheduler, TokenCostModel
+
+try:                                       # optional dep: property-based
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                        # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, seed=7, n=4):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        plen = int(rng.integers(3, 30))
+        out.append(Request(
+            uid=i, prompt=rng.integers(0, cfg.vocab_size, size=plen,
+                                       dtype=np.int32),
+            max_new_tokens=int(rng.integers(2, 8))))
+    return out
+
+
+def _engine(params, cfg, **kw):
+    kw.setdefault("num_pages", 13)
+    return ServeEngine(params, cfg, max_len=56, slots=2, cache_mode="paged",
+                       page_size=8, **kw)
+
+
+def _serve(params, cfg, chunk=None, seed=7, **kw):
+    eng = _engine(params, cfg, prefill_chunk_tokens=chunk, **kw)
+    trace = [(1 + 2 * i, r) for i, r in enumerate(_requests(cfg, seed))]
+    done = eng.run_stream(trace, max_steps=500)
+    assert all(r.done for r in done), [(r.uid, r.done) for r in done]
+    assert eng.kv.pages_in_use() == 0, "run leaked pages"
+    return {r.uid: list(r.generated) for r in done}, eng
+
+
+# -- token identity ----------------------------------------------------------
+
+def test_chunked_equals_oneshot_random_boundaries(setup):
+    """Chunked prefill is a schedule change, never an output change: for
+    RANDOM chunk sizes (so chunk boundaries fall at arbitrary, page-
+    unaligned positions) every request's greedy output is identical to the
+    one-shot engine's."""
+    cfg, params = setup
+    base, _ = _serve(params, cfg, chunk=None)
+    rng = np.random.default_rng(11)
+    for chunk in sorted(set(int(c) for c in rng.integers(1, 20, size=4))):
+        got, _ = _serve(params, cfg, chunk=chunk)
+        assert got == base, f"chunk={chunk} diverged from one-shot"
+
+
+if HAVE_HYPOTHESIS:                                    # pragma: no cover
+    @settings(max_examples=8, deadline=None)
+    @given(chunk=st.integers(min_value=1, max_value=24))
+    def test_chunked_equals_oneshot_property(chunk):
+        cfg = get_config("tiny")
+        params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+        base, _ = _serve(params, cfg, chunk=None)
+        got, _ = _serve(params, cfg, chunk=chunk)
+        assert got == base
+
+
+def test_budgeted_chunked_equals_oneshot(setup):
+    """A step budget changes WHEN chunks and admissions run, not what any
+    request generates."""
+    cfg, params = setup
+    base, _ = _serve(params, cfg, chunk=None)
+    cm = TokenCostModel(decode_step_cost=1.0, prefill_token_cost=0.1,
+                        step_budget=2.0)
+    got, eng = _serve(params, cfg, chunk=8, cost_model=cm)
+    assert got == base
+    # the budget is a soft gate: new work (a chunk, an admission) only
+    # STARTS while spending is under budget, so a step can overshoot by at
+    # most the work it had already committed to — one chunk per slot (0.8
+    # each) plus the decode step (1.0) on top of the 2.0 budget
+    costs = [c for c, _ in eng.last_run_step_costs]
+    assert costs and max(costs) <= 2.0 + 2 * 0.8 + 1.0 + 1e-9, max(costs)
+
+
+def test_chunked_requires_paged_cache(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(params, cfg, max_len=56, slots=2, cache_mode="dense",
+                    prefill_chunk_tokens=4)
+
+
+# -- mid-prefill preemption --------------------------------------------------
+
+def test_midprefill_preemption_resumes_from_chunks(setup):
+    """A slot suspended MID-PREFILL parks its completed chunks as retained
+    pages; resume re-aliases them and re-prefills only the evicted tail —
+    and the outputs still match the one-shot engine exactly."""
+    cfg, params = setup
+
+    def workload():
+        # 40-token prompt chunking 4 at a time holds 5 of 6 usable pages
+        # by its 8th chunk; 14-token deadlined arrivals (2 pages each)
+        # force the pool over capacity while it is still mid-prefill
+        big = Request(uid=0,
+                      prompt=(np.arange(40, dtype=np.int32) * 3 + 1)
+                      % cfg.vocab_size,
+                      max_new_tokens=6, priority=0)
+        smalls = [Request(uid=1 + i,
+                          prompt=(np.arange(14, dtype=np.int32) + 11 * i)
+                          % cfg.vocab_size,
+                          max_new_tokens=3, priority=1, deadline=12.0)
+                  for i in range(3)]
+        return [(1, big)] + [(2 + 3 * i, r) for i, r in enumerate(smalls)]
+
+    def run(chunk):
+        eng = _engine(params, cfg, num_pages=7,
+                      prefill_chunk_tokens=chunk)
+        done = eng.run_stream(workload(), max_steps=500)
+        assert all(r.done for r in done)
+        return {r.uid: list(r.generated) for r in done}, eng
+
+    base, _ = run(None)
+    got, eng = run(4)
+    assert got == base, "chunked outputs diverged under preemption pressure"
+    # the big request was suspended before its prefill finished ...
+    mid = [e for e in eng.preemption_events
+           if e.uid == 0 and e.resident_tokens < 40]
+    assert mid, (f"no mid-prefill suspension in "
+                 f"{[(e.uid, e.resident_tokens) for e in eng.preemption_events]}")
+    # ... and its resumption re-aliased at least one completed-chunk page
+    # instead of re-prefilling from scratch (the tail the eviction took is
+    # all that re-prefills)
+    resumed = [e for e in eng.admission_events if e.uid == 0 and e.resumed]
+    assert resumed and resumed[0].prefix_tokens >= eng.kv.page_size, (
+        f"resume did not re-alias completed chunks: {resumed}")
+
+
+# -- executable discipline ---------------------------------------------------
+
+def test_chunked_prefill_does_not_recompile(setup):
+    """Chunking must reuse prefill executables, not explode the compile
+    cache: with ``bucket_multiple`` aligned to the chunk size, a second
+    identical run (and a different-seed run over the same buckets) adds
+    ZERO new prefill traces."""
+    cfg, params = setup
+    eng = _engine(params, cfg, prefill_chunk_tokens=8, bucket_multiple=8)
+    trace = [(1 + 2 * i, r) for i, r in enumerate(_requests(cfg))]
+    eng.run_stream(trace, max_steps=500)
+    first = eng.prefill_trace_count()
+    assert first >= 1
+    # same workload again: every (bucket, group-size, prefix-width)
+    # signature is already compiled
+    trace = [(1 + 2 * i, r) for i, r in enumerate(_requests(cfg))]
+    eng.run_stream(trace, max_steps=500)
+    assert eng.prefill_trace_count() == first, (
+        f"identical rerun recompiled: {eng.prefill_trace_count()} vs "
+        f"{first} executables")
+
+
+def test_bucket_multiple_configurable(setup):
+    """The prefill padding-bucket granularity is per-engine configurable
+    (coarser buckets -> fewer executables, more padding)."""
+    cfg, params = setup
+    fine = _engine(params, cfg, bucket_multiple=4)
+    coarse = _engine(params, cfg, bucket_multiple=16)
+    assert fine._bucket(5) == 8 and coarse._bucket(5) == 16
+    assert fine._bucket(16) == 16 and coarse._bucket(17) == 32
+    # capped at max_len either way
+    assert coarse._bucket(55) == 56
+    with pytest.raises(ValueError, match="bucket_multiple"):
+        _engine(params, cfg, bucket_multiple=0)
+
+
+# -- wall-clock deadlines / deadline_steps shim ------------------------------
+
+def test_deadline_steps_deprecation_and_mapping():
+    """``deadline_steps`` warns and maps onto the cost clock as
+    ``deadline = deadline_steps * decode_step_cost`` — identical slack
+    under any cost model."""
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        legacy = Request(uid=0, prompt=np.arange(4), deadline_steps=12)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert "deadline" in str(caught[0].message)
+
+    cm = TokenCostModel(decode_step_cost=0.25)
+    new = Request(uid=1, prompt=np.arange(4), deadline=12 * 0.25)
+    for r in (legacy, new):
+        r.arrival_step = 2
+        r.arrival_cost = cm.steps_to_cost(2)
+        r._sched_stamp = r.uid
+    sched = StreamScheduler(cost_model=cm)
+    for now in (0.5, 1.25, 3.0):
+        assert sched.slack(legacy, now) == pytest.approx(
+            sched.slack(new, now))
+
+
+def test_wallclock_deadline_slo(setup):
+    """``Request.deadline`` is judged on the cost clock: under the default
+    model it reproduces deadline_steps semantics exactly."""
+    cfg, params = setup
+
+    def run(**req_kw):
+        eng = _engine(params, cfg)
+        r = Request(uid=0, prompt=np.arange(5, dtype=np.int32),
+                    max_new_tokens=4, **req_kw)
+        done = eng.run_stream([(1, r)], max_steps=64)
+        return done[0]
+
+    tight = run(deadline=1.0)
+    assert tight.slo_met is False and tight.finish_cost is not None
+    loose = run(deadline=50.0)
+    assert loose.slo_met is True
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = run(deadline_steps=50)
+    assert legacy.slo_met is True
+    none = run()
+    assert none.slo_met is None
+
+
+def test_cost_model_validation_and_calibrate():
+    with pytest.raises(ValueError, match="decode_step_cost"):
+        TokenCostModel(decode_step_cost=0)
+    with pytest.raises(ValueError, match="prefill"):
+        TokenCostModel(prefill_token_cost=-1)
+    with pytest.raises(ValueError, match="step_budget"):
+        TokenCostModel(step_budget=0)
+    cm = TokenCostModel.calibrate(decode_step_s=2e-3, prefill_token_s=1e-4,
+                                  step_budget_s=4e-3)
+    assert cm.steps_to_cost(3) == pytest.approx(6e-3)
+    assert cm.cost_to_steps(6e-3) == pytest.approx(3)
+    assert cm.prefill_cost(10) == pytest.approx(1e-3)
+    assert cm.step_budget == pytest.approx(4e-3)
+
+
+# -- prefix-prefill kernel vs oracle -----------------------------------------
+
+def _prefix_case(key, b, s, h, kh, hd, pages, pg, maxp, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, s, h, hd)).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, s, kh, hd)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (b, s, kh, hd)) * 0.5).astype(dtype)
+    k_pool = (jax.random.normal(ks[3], (pages, pg, kh, hd)) * 0.5
+              ).astype(dtype)
+    v_pool = (jax.random.normal(ks[4], (pages, pg, kh, hd)) * 0.5
+              ).astype(dtype)
+    table = jax.random.randint(jax.random.PRNGKey(3), (b, maxp), 0, pages)
+    return q, k, v, k_pool, v_pool, table
+
+
+@pytest.mark.parametrize("b,s,h,kh,hd,pages,pg,maxp", [
+    (2, 8, 4, 4, 32, 8, 8, 3),     # MHA
+    (2, 8, 8, 2, 32, 8, 8, 3),     # GQA
+    (1, 16, 4, 1, 64, 6, 8, 2),    # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_prefix_prefill_kernel_vs_ref(b, s, h, kh, hd, pages, pg, maxp,
+                                      dtype):
+    """Online-softmax prefix-prefill kernel == gather-based oracle over
+    ragged, page-UNALIGNED prefix lengths."""
+    q, k, v, k_pool, v_pool, table = _prefix_case(
+        jax.random.PRNGKey(b + s), b, s, h, kh, hd, pages, pg, maxp, dtype)
+    rng = np.random.default_rng(b)
+    plen = jnp.asarray(rng.integers(0, maxp * pg + 1, size=b), jnp.int32)
+    want = ref.paged_prefill_attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), k_pool.astype(jnp.float32),
+        v_pool.astype(jnp.float32), table, plen)
+    got = ops.paged_prefill_attention(q, k, v, k_pool, v_pool, table,
+                                      plen).astype(jnp.float32)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("plen", [
+    [0, 0],          # empty prefix: pure causal prefill
+    [8, 8],          # exactly one full page
+    [1, 24],         # single prefix token / full table
+    [5, 17],         # mid-page boundaries
+])
+def test_prefix_prefill_kernel_edges(plen):
+    b, s, h, kh, hd, pages, pg, maxp = 2, 8, 4, 2, 32, 8, 8, 3
+    q, k, v, k_pool, v_pool, table = _prefix_case(
+        jax.random.PRNGKey(17), b, s, h, kh, hd, pages, pg, maxp)
+    lens = jnp.asarray(plen, jnp.int32)
+    want = ref.paged_prefill_attention_ref(q, k, v, k_pool, v_pool, table,
+                                           lens)
+    got = ops.paged_prefill_attention(q, k, v, k_pool, v_pool, table, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_prefix_prefill_kernel_empty_table():
+    """maxp == 0 (no prefix pages anywhere — a fresh admission group): the
+    wrapper pads a trash column and the result equals a causal prefill."""
+    b, s, h, kh, hd, pg = 2, 8, 4, 2, 32, 8
+    q, k, v, k_pool, v_pool, _ = _prefix_case(
+        jax.random.PRNGKey(23), b, s, h, kh, hd, 4, pg, 1)
+    empty = jnp.zeros((b, 0), jnp.int32)
+    lens = jnp.zeros((b,), jnp.int32)
+    got = ops.paged_prefill_attention(q, k, v, k_pool, v_pool, empty, lens)
+    want = ref.paged_prefill_attention_ref(
+        q, k, v, k_pool, v_pool, jnp.zeros((b, 1), jnp.int32), lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_prefix_prefill_single_suffix_token():
+    """s == 1 suffix (the smallest chunk) against a resident prefix."""
+    b, s, h, kh, hd, pages, pg, maxp = 2, 1, 4, 4, 32, 6, 8, 2
+    q, k, v, k_pool, v_pool, table = _prefix_case(
+        jax.random.PRNGKey(29), b, s, h, kh, hd, pages, pg, maxp)
+    lens = jnp.asarray([7, 16], jnp.int32)
+    want = ref.paged_prefill_attention_ref(q, k, v, k_pool, v_pool, table,
+                                           lens)
+    got = ops.paged_prefill_attention(q, k, v, k_pool, v_pool, table, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
