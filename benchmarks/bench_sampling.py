@@ -24,10 +24,10 @@ import warnings
 import jax
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import bench_row
 from repro.configs import get_config
 from repro.models import model as model_lib
-from repro.serve import Request, SamplingParams, ServeEngine
+from repro.serve import Request, SamplingParams, ServeEngine, SpecConfig
 from repro.serve import sampling as sampling_lib
 
 
@@ -70,10 +70,11 @@ def _bench_sampler(quick: bool):
         return (time.perf_counter() - t0) / iters
 
     t_fused, t_host = _time(fused), _time(host)
-    csv_row("sampling_fused_us", t_fused * 1e6,
-            f"B={b}, V={v}, mixed temperature/top_k/top_p per row")
-    csv_row("sampling_host_loop_us", t_host * 1e6,
-            f"speedup {t_host / t_fused:.1f}x")
+    bench_row("sampling_fused_us", t_fused * 1e6, unit="us_per_call",
+              batch=f"B={b} V={v}",
+              derived="mixed temperature/top_k/top_p per row")
+    bench_row("sampling_host_loop_us", t_host * 1e6, unit="us_per_call",
+              derived=f"speedup {t_host / t_fused:.1f}x")
     assert t_fused < t_host, (
         f"fused on-device sampler ({t_fused * 1e6:.0f}us) must beat the "
         f"host loop ({t_host * 1e6:.0f}us) at B={b}, V={v}")
@@ -113,9 +114,9 @@ def _bench_early_stop(params, cfg, quick: bool):
                              max_steps=budget)
     c_nostop = sum(r.done for r in done_nostop)
     c_stop = sum(r.done for r in done_stop)
-    csv_row("sampling_stop_completed", c_stop,
-            f"vs {c_nostop} without stop ids, {n} requests, "
-            f"{budget} steps, equal pool")
+    bench_row("sampling_stop_completed", c_stop, unit="requests",
+              derived=f"vs {c_nostop} without stop ids, {n} requests, "
+              f"{budget} steps, equal pool")
     assert all(r.finish_reason == "stop" for r in done_stop if r.done), (
         "stop engine requests must finish via their stop token")
     assert c_stop > c_nostop, (
@@ -125,11 +126,32 @@ def _bench_early_stop(params, cfg, quick: bool):
         assert eng.kv.pages_in_use() == 0, "benchmark run leaked pages"
 
 
+def _bench_decode_modes(params, cfg, quick: bool):
+    """Unit-tagged decode-throughput rows for both sampling modes (plain
+    and speculative) on one workload — the informational companion of
+    ``bench_spec_decode``'s guarded comparison."""
+    n = 4 if quick else 8
+    engine_kw = dict(max_len=48, slots=2, cache_mode="paged", page_size=8,
+                     num_pages=13)
+    for mode, spec in (("nonspec", None), ("spec", SpecConfig(k=3))):
+        eng = ServeEngine(params, cfg, spec=spec, **engine_kw)
+        eng.run(_stop_workload(cfg, n), max_steps=4096)      # warmup
+        t0 = time.perf_counter()
+        done = eng.run(_stop_workload(cfg, n), max_steps=4096)
+        dt = time.perf_counter() - t0
+        tokens = sum(len(r.generated) for r in done)
+        bench_row(f"sampling_decode_{mode}_tok_per_s", tokens / dt,
+                  unit="tokens_per_s", requests=n,
+                  steps=eng.last_run_steps)
+        assert eng.kv.pages_in_use() == 0, "benchmark run leaked pages"
+
+
 def main(quick: bool = False):
     cfg = get_config("tiny")
     params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
     _bench_sampler(quick)
     _bench_early_stop(params, cfg, quick)
+    _bench_decode_modes(params, cfg, quick)
     print("sampling guardrails passed: fused sampler beats the host loop, "
           "stop tokens turn the page pool over faster")
 

@@ -13,6 +13,7 @@
     paged vs dense KV cache       -> bench_paged_kv
     streaming admission + SLOs    -> bench_streaming
     fused sampling + early stop   -> bench_sampling
+    speculative decoding          -> bench_spec_decode
 
 ``--quick`` runs the CI smoke subset (CPU): the dispatch hot path — so
 PEFT-registry regressions are visible on every push — the closed-form Table 8
@@ -38,8 +39,8 @@ def main(quick: bool = False, json_path: str = "",
     from benchmarks import (bench_activation_memory, bench_convergence,
                             bench_dispatch, bench_geometry, bench_kernels,
                             bench_neumann, bench_paged_kv, bench_params,
-                            bench_sampling, bench_serve, bench_speed,
-                            bench_streaming)
+                            bench_sampling, bench_serve, bench_spec_decode,
+                            bench_speed, bench_streaming)
     from benchmarks import common
     from repro.obs import JsonlTracker
     jsonl = None
@@ -51,12 +52,14 @@ def main(quick: bool = False, json_path: str = "",
                 (bench_serve, {"quick": True}),
                 (bench_paged_kv, {"quick": True}),
                 (bench_streaming, {"quick": True}),
-                (bench_sampling, {"quick": True})]
+                (bench_sampling, {"quick": True}),
+                (bench_spec_decode, {"quick": True})]
     else:
         mods = [(bench_params, {}), (bench_geometry, {}), (bench_neumann, {}),
                 (bench_kernels, {}), (bench_dispatch, {}),
                 (bench_serve, {}), (bench_paged_kv, {}),
                 (bench_streaming, {}), (bench_sampling, {}),
+                (bench_spec_decode, {}),
                 (bench_activation_memory, {}), (bench_speed, {}),
                 (bench_convergence, {})]
     failed = []

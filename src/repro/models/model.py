@@ -749,7 +749,8 @@ def prefill(params, batch: Dict, cfg: ModelConfig, max_len: int,
 
 
 def paged_prefill(params, batch: Dict, cache: Dict, cfg: ModelConfig,
-                  lengths, prefix_lengths, moe_impl="dense"):
+                  lengths, prefix_lengths, moe_impl="dense",
+                  all_logits: bool = False):
     """Suffix prefill through block-paged KV indirection.
 
     ``cache``: ``{"k","v"}`` pools ``(L, P, pg, KH, hd)`` plus
@@ -761,7 +762,11 @@ def paged_prefill(params, batch: Dict, cache: Dict, cfg: ModelConfig,
     attends over the aliased prefix pages + the causal suffix — resident
     prefix pages are never recomputed.  With ``prefix_table`` width 0 this
     is an ordinary (but page-scattered) full prefill, numerically identical
-    to the dense path.  Returns (last-real-token logits, updated pools)."""
+    to the dense path.  Returns (last-real-token logits, updated pools);
+    with ``all_logits=True`` the logits cover EVERY suffix position,
+    ``(B, S, V)`` — the speculative-decode verify pass reads one target
+    distribution per draft-window position (pad rows beyond ``lengths``
+    carry garbage logits the caller must ignore)."""
     if cfg.family not in ("dense", "moe", "vlm"):
         raise ValueError(
             f"paged prefill supports attention families only, not "
@@ -788,6 +793,8 @@ def paged_prefill(params, batch: Dict, cache: Dict, cfg: ModelConfig,
     else:
         x, new_kv = _unrolled_scan(body, x, xs, cfg.num_layers)
     x = layers.apply_norm(params["final_norm"], x)
+    if all_logits:
+        return lm_logits(params, x, cfg), new_kv
     logits = lm_logits(params, _last_hidden(x, lengths), cfg)
     return logits, new_kv
 

@@ -6,3 +6,5 @@ from repro.serve.sampling import (  # noqa: F401
     MAX_LOGPROBS, SamplingParams, TokenLogprobs)
 from repro.serve.scheduler import (  # noqa: F401
     StreamScheduler, TokenCostModel)
+from repro.serve.spec import (  # noqa: F401
+    BASE_DRAFT, SpecConfig, accepted_prefix)

@@ -49,6 +49,20 @@ function of ``(seed, position)``, reproducible across preemption and
 admission order.  A slot that emits one of its stop ids finishes
 immediately, frees its pages, and refills mid-decode.
 
+Decode can run SPECULATIVELY (:mod:`repro.serve.spec`): a slot with a
+:class:`SpecConfig` drafts ``k`` tokens per engine step with a cheap path
+(base weights or any registered adapter) through one fused
+draft-scan dispatch, verifies all ``k + 1`` window positions in one
+batched target pass over its paged KV, and accepts via the counter-based
+RNG's coupled rejection rule — bit-identical to non-speculative decode
+for greedy requests and the identical ``(seed, position)`` draw stream
+otherwise, regardless of acceptance length, preemption, or co-batch mix.
+Rejected window pages roll back (``PagedKVCache.truncate_slot``), so the
+pool only ever holds accepted tokens between steps.  Requests may also ask
+for ``n > 1`` parallel completions: ``submit()`` forks per-branch requests
+whose page tables copy-on-write share the one set of prompt pages, with
+per-branch seeds via ``fold_in(seed, branch)``.
+
 All requests share one compiled prefill executable per prompt bucket and one
 decode executable; adding an adapter grows the bank (a recompile), serving it
 costs a gather.
@@ -71,6 +85,7 @@ from repro.serve import sampling as sampling_lib
 from repro.serve.kv_cache import OutOfPages, PagedKVCache, TRASH_PAGE
 from repro.serve.sampling import SamplingParams, TokenLogprobs
 from repro.serve.scheduler import StreamScheduler, TokenCostModel
+from repro.serve.spec import SpecConfig, accepted_prefix
 
 #: adapter name every request uses unless it asks for something else
 BASE_ADAPTER = "base"
@@ -104,6 +119,20 @@ class Request:
     adapter: str = BASE_ADAPTER     # which registered adapter serves this
     #: per-request generation control; None inherits the engine default
     sampling: Optional[SamplingParams] = None
+    #: speculative-decode control (:class:`repro.serve.spec.SpecConfig`);
+    #: None inherits the engine default, ``SpecConfig(k=0)`` opts this
+    #: request out of an engine-wide default
+    spec: Optional[SpecConfig] = None
+    #: parallel completions: ``n > 1`` makes ``submit()`` fork this request
+    #: into ``n`` branch requests sharing one set of prompt pages
+    #: (copy-on-write page tables, per-branch seeds via
+    #: ``fold_in(seed, branch)``).  The parent is returned exactly once,
+    #: after its last branch completes, with the per-branch Requests on
+    #: :attr:`branches` (each holding its own ``generated`` /
+    #: ``finish_reason``); the parent's own ``generated`` stays empty.
+    n: int = 1
+    #: the branch Requests of an ``n > 1`` fan-out (engine-populated)
+    branches: List["Request"] = dataclasses.field(default_factory=list)
     #: scheduling weight: higher-priority requests are admitted first and
     #: may preempt lower-priority running slots under page pressure
     priority: int = 0
@@ -244,6 +273,7 @@ class ServeEngine:
                  retain_prefix_cache: bool = True,
                  temperature=_LEGACY_UNSET, sample_seed: int = 0,
                  sampling: Optional[SamplingParams] = None,
+                 spec: Optional[SpecConfig] = None,
                  tracker: Optional[Tracker] = None,
                  prefill_chunk_tokens: Optional[int] = None,
                  cost_model: Optional[TokenCostModel] = None,
@@ -299,6 +329,15 @@ class ServeEngine:
                 f"{_PAGED_FAMILIES}, not {cfg.family!r} — SSM/hybrid state "
                 f"caches stay dense (use cache_mode='dense' or 'auto')")
         self.cache_mode = cache_mode
+        #: default speculative-decode config for requests that don't carry
+        #: their own (None / k=0 = no speculation)
+        self.default_spec = spec
+        if spec is not None and spec.k > 0 and cache_mode != "paged":
+            raise ValueError(
+                "speculative decoding needs the paged KV cache (the verify "
+                "pass runs paged_prefill over the draft window and rollback "
+                "releases window pages) — use cache_mode='paged' or drop "
+                "spec")
         self.kv: Optional[PagedKVCache] = None
         if cache_mode == "paged":
             self.kv = PagedKVCache(self.cfg, slots, max_len,
@@ -361,6 +400,47 @@ class ServeEngine:
                                                lengths, prefix,
                                                moe_impl="dense")
 
+        def _verify_paged(p, b, pools, pt, pre_pt, lengths, prefix, ids):
+            # the speculative-decode verify pass: one paged prefill over
+            # each row's [last_token, drafts...] window, returning logits
+            # at EVERY window position — the per-position target draws
+            # that drive acceptance.  Writes target KV at the window
+            # positions (overwriting the draft pass's writes); the window
+            # attention reads only committed prefix pages + the in-pass
+            # suffix K/V, never the draft model's writes.
+            self._prefill_traces += 1          # trace-time side effect
+            with peft_registry.batched_adapter_ids(ids):
+                cache = {"k": pools["k"], "v": pools["v"], "page_table": pt,
+                         "prefix_table": pre_pt}
+                return model_lib.paged_prefill(p, b, cache, self.cfg,
+                                               lengths, prefix,
+                                               moe_impl="dense",
+                                               all_logits=True)
+
+        def _draft_scan(p, tok0, pools, table, positions, ids,
+                        temps, top_ks, top_ps, seeds, counters, k):
+            # the fused draft loop: k chained decode+sample steps in ONE
+            # dispatch (lax.scan) — drafted tokens never leave the device
+            # between steps, so a k-token draft costs one host round-trip
+            # instead of 2k.  Draws use the in-graph sampler body with the
+            # requests' own (seed, counter) streams; non-drafting rows ride
+            # as ghosts (trash-masked table rows, greedy params).
+            vocab = self.cfg.vocab_size
+            with peft_registry.batched_adapter_ids(ids):
+                def body(carry, j):
+                    tok, ck, cv = carry
+                    cache = {"k": ck, "v": cv, "page_table": table}
+                    logits, nc = model_lib.decode_step(
+                        p, {"tokens": tok}, cache, positions + j, self.cfg)
+                    nxt, _, _, _ = sampling_lib._sample_impl(
+                        logits[:, -1, :vocab], temps, top_ks, top_ps,
+                        seeds, counters + j, want_logprobs=False)
+                    nxt = nxt.astype(jnp.int32)
+                    return (nxt[:, None], nc["k"], nc["v"]), nxt
+                (_tok, ck, cv), drafted = jax.lax.scan(
+                    body, (tok0, pools["k"], pools["v"]), jnp.arange(k))
+            return drafted.T, {"k": ck, "v": cv}
+
         # donate the cache/pool buffers so XLA updates KV in place instead
         # of double-buffering the whole pool every step (donation is a no-op
         # on CPU and would only warn, so gate it)
@@ -368,6 +448,9 @@ class ServeEngine:
         self._decode = jax.jit(_decode, donate_argnums=donate)
         self._prefill = jax.jit(_prefill)
         self._prefill_paged = jax.jit(_prefill_paged, donate_argnums=donate)
+        self._verify_paged = jax.jit(_verify_paged, donate_argnums=donate)
+        self._draft_scan = jax.jit(_draft_scan, static_argnames=("k",),
+                                   donate_argnums=donate)
         self.cache = None           # dense-mode cache tree
         self.positions = np.zeros((slots,), np.int32)
         self.active: List[Optional[Request]] = [None] * slots
@@ -467,13 +550,15 @@ class ServeEngine:
             DeprecationWarning, stacklevel=2)
         return [(e.step, e.slot, e.uid) for e in self.preemption_events]
 
-    def _observe_decode(self, live: List[int]) -> None:
+    def _observe_decode(self, live: List[int],
+                        counts: Optional[Dict[int, int]] = None) -> None:
         """Per-decode-step metrics, computed from already-host-resident
         values only (slot bookkeeping — never from device buffers, so the
-        step loop gains no device->host syncs).  The caller gates this
-        behind ``self._obs``: with the default :class:`NoopTracker` the
-        decode loop does no metric work at all (<2% throughput guard in
-        ``benchmarks/bench_serve.py``)."""
+        step loop gains no device->host syncs).  ``counts`` maps slot ->
+        tokens produced this step (speculative slots accept several;
+        default 1).  The caller gates this behind ``self._obs``: with the
+        default :class:`NoopTracker` the decode loop does no metric work
+        at all (<2% throughput guard in ``benchmarks/bench_serve.py``)."""
         tr = self._tracker
         s = self._obs_step
         tr.gauge("engine/live_slots", len(live), step=s)
@@ -481,7 +566,8 @@ class ServeEngine:
         by_adapter: Dict[str, int] = {}
         for i in live:
             a = self.active[i].adapter
-            by_adapter[a] = by_adapter.get(a, 0) + 1
+            n = 1 if counts is None else counts.get(i, 1)
+            by_adapter[a] = by_adapter.get(a, 0) + n
         for a, n in by_adapter.items():
             tr.count(f"engine/tokens/{a}", n, step=s)
         if self.kv is not None:
@@ -605,8 +691,16 @@ class ServeEngine:
         return sp.seed if sp.seed is not None \
             else sampling_lib.derive_seed(self.sample_seed, r.uid)
 
-    def _sample_rows(self, logits_rows,
-                     reqs: List[Optional[Request]]) -> np.ndarray:
+    def _spec_for(self, r: Request) -> Optional[SpecConfig]:
+        """The request's effective speculative-decode config, or None when
+        it decodes plainly (no config, k=0 opt-out, or a dense cache)."""
+        sc = r.spec if r.spec is not None else self.default_spec
+        if sc is not None and sc.k > 0 and self.cache_mode == "paged":
+            return sc
+        return None
+
+    def _sample_rows(self, logits_rows, reqs: List[Optional[Request]],
+                     draft_rows: int = 0) -> np.ndarray:
         """Draw every row's next token in ONE fused on-device call.
 
         ``logits_rows`` is the ``(B, vocab)`` last-position logits slice
@@ -616,8 +710,11 @@ class ServeEngine:
         whose next token was sampled before suspension).  Each live row's
         draw is ``fold_in(PRNGKey(seed), len(generated))`` — discarded
         rows burn no RNG state, so schedules never shift later draws.
-        The caller MUST append the returned token for every non-None row
-        (logprob recording assumes it)."""
+        ``draft_rows``: how many None rows belong to slots the speculative
+        path already served this step (excluded from ghost-row accounting
+        — see :func:`repro.serve.sampling.record_occupancy`).  The caller
+        MUST append the returned token for every non-None row (logprob
+        recording assumes it)."""
         greedy = SamplingParams.greedy()
         entries = []
         for r in reqs:
@@ -629,7 +726,8 @@ class ServeEngine:
         temps, ks, ps, seeds, counters = sampling_lib.stack(entries)
         if self._obs:
             sampling_lib.record_occupancy(self._tracker, reqs,
-                                          step=self._obs_step)
+                                          step=self._obs_step,
+                                          draft_rows=draft_rows)
         want_lp = any(r is not None and self._sampling_for(r).logprobs
                       for r in reqs)
         toks, chosen, top_ids, top_lps = self._sample_fn(
@@ -1157,17 +1255,18 @@ class ServeEngine:
                         f"write would corrupt live KV")
         self.last_decode_positions = positions.copy()
         if self.cache_mode == "paged":
-            # mid-prefill slots ride the decode batch as ghosts too (their
-            # positions stay 0, no token sampled) — but unlike dead slots
-            # their table row maps REAL pages (completed chunks, possibly
-            # aliased), so the ghost write at position 0 must be redirected
-            # to trash in the decode call's table copy
-            inprog = [i for i in range(self.slots)
-                      if self.active[i] is not None
-                      and not getattr(self.active[i], "_prefill_done", True)]
-            if inprog:
+            # active slots OUTSIDE the live list ride the decode batch as
+            # ghosts (positions pinned 0, no token sampled): mid-prefill
+            # slots and slots a speculative pass already served this step.
+            # Unlike dead slots their table rows map REAL pages (completed
+            # chunks / committed KV, possibly aliased), so the ghost write
+            # at position 0 must be redirected to trash in the decode
+            # call's table copy
+            ghosted = [i for i in range(self.slots)
+                       if self.active[i] is not None and i not in live]
+            if ghosted:
                 masked = self.kv.tables.copy()
-                masked[inprog] = TRASH_PAGE
+                masked[ghosted] = TRASH_PAGE
                 table = jnp.asarray(masked)
             else:
                 table = self.kv.table_jax()
@@ -1185,6 +1284,188 @@ class ServeEngine:
         # token ids (not (slots, vocab) logits) cross back to the host
         return logits[:, -1, :self.cfg.vocab_size], live
 
+    def _spec_step(self, tree, spec_live: List[int], step: int
+                   ) -> Tuple[Dict[int, int], List[int]]:
+        """One speculative draft+verify pass over the spec-enabled live
+        slots.  Returns ``(handled, demoted)``: ``handled`` maps slot ->
+        accepted token count (>= 1) for slots the pass served; ``demoted``
+        lists slots whose effective draft length clamped below 1 this step
+        (window would overshoot ``max_new_tokens`` / ``max_len`` / the
+        slot's page reach) — they fall back to the plain decode batch.
+
+        The draft length is clamped so a window NEVER overshoots: ``k + 1
+        <= remaining_tokens`` (a full accept emits k+1 tokens), window
+        positions stay inside ``max_len``, and — on pool pressure — inside
+        the pages the slot already holds (speculative work never preempts
+        a victim just to grow its window)."""
+        handled: Dict[int, int] = {}
+        demoted: List[int] = []
+        # the step's guaranteed write (position `pos`) uses the normal
+        # preempting path; only the EXTRA window pages are best-effort
+        spec_live = self._ensure_decode_pages(spec_live, step)
+        kv = self.kv
+        plans = []
+        for i in spec_live:
+            r = self.active[i]
+            sc = self._spec_for(r)
+            pos = int(self.positions[i])
+            n0 = int(kv.n_pages[i])
+            k = min(sc.k, r.remaining_tokens - 1, self.max_len - 2 - pos)
+            if k >= 1:
+                try:
+                    kv.ensure_position(i, pos + k)
+                except OutOfPages:
+                    k = min(k, int(kv.n_pages[i]) * kv.page_size - 1 - pos)
+            if k < 1:
+                demoted.append(i)
+                continue
+            plans.append((i, r, sc, pos, len(r.generated), n0, k))
+        # group by effective k: one fused draft scan + one verify call per
+        # distinct window width (usually a single group), so the jitted
+        # executables see a handful of static shapes, not one per request
+        groups: Dict[int, list] = {}
+        for pl in plans:
+            groups.setdefault(pl[6], []).append(pl)
+        for k in sorted(groups):
+            handled.update(self._spec_group(tree, groups[k], k, step))
+        return handled, demoted
+
+    def _spec_group(self, tree, group, k: int, step: int) -> Dict[int, int]:
+        """Draft, verify and accept one k-wide group of speculative slots.
+
+        Draft: one ``lax.scan`` of k chained draft-model decode+sample
+        steps (slots-wide; non-group rows ride as trash-masked ghosts),
+        each draw using the slot's OWN sampling params on the counter
+        stream ``fold_in(seed, m + j)`` — the exact draws a plain engine
+        would make at those generation indices.  The draft writes its KV
+        over the window positions; the verify pass overwrites them.
+
+        Verify: one paged prefill over each row's ``[last_token,
+        drafts...]`` window with per-position logits.  Window attention
+        reads committed prefix pages plus the IN-PASS suffix K/V — never
+        the draft model's pool writes — so position t's logits equal what
+        t sequential plain decode steps would produce.
+
+        Accept: one fused sampler call over all g*(k+1) position rows
+        draws the target token at every window position from the same
+        (seed, counter) streams; :func:`repro.serve.spec.accepted_prefix`
+        keeps the longest draft prefix the target agrees with (plus the
+        bonus token after a full match).  Accepted-but-stale window KV
+        beyond the last kept position is never attended (span masks) and
+        is overwritten by later steps; whole stale PAGES are returned to
+        the pool immediately (:meth:`PagedKVCache.truncate_slot`)."""
+        kv = self.kv
+        cm = self.cost_model
+        vocab = self.cfg.vocab_size
+        greedy = SamplingParams.greedy()
+        w = k + 1
+        g = len(group)
+        in_group = {pl[0] for pl in group}
+        # --- draft: slots-wide fused scan --------------------------------
+        tok0 = np.zeros((self.slots, 1), np.int32)
+        ids = np.zeros((self.slots,), np.int32)
+        positions = np.zeros((self.slots,), np.int32)
+        entries = [(greedy, 0, 0)] * self.slots
+        for (i, r, sc, pos, m, _n0, _k) in group:
+            tok0[i, 0] = r.generated[-1]
+            ids[i] = self._adapter_id(sc.draft_adapter)
+            positions[i] = pos
+            entries[i] = (self._sampling_for(r), self._seed_for(r), m)
+        # every non-group row (dead, mid-prefill, plain-decode, other spec
+        # group) ghosts through the scan at position 0: real table rows
+        # must be trash-masked or the ghost writes corrupt page-0 KV
+        masked = kv.tables.copy()
+        ghost = [i for i in range(self.slots) if i not in in_group]
+        if ghost:
+            masked[ghost] = TRASH_PAGE
+        temps, ks, ps, seeds, counters = sampling_lib.stack(entries)
+        self.last_decode_positions = positions.copy()
+        drafted, new_pools = self._draft_scan(
+            tree, jnp.asarray(tok0), kv.pools, jnp.asarray(masked),
+            jnp.asarray(positions), jnp.asarray(ids),
+            temps, ks, ps, seeds, counters, k=k)
+        kv.pools = new_pools
+        drafted = np.asarray(drafted)          # (slots, k)
+        self._step_spent += cm.draft_cost(k)
+        # --- verify: one g-row, (k+1)-wide paged prefill -----------------
+        toks = np.zeros((g, w), np.int32)
+        lens = np.full((g,), w, np.int32)
+        prefs = np.zeros((g,), np.int32)
+        vids = np.zeros((g,), np.int32)
+        rows_pt = np.zeros((g, kv.pages_per_slot), np.int32)
+        for j, (i, r, sc, pos, _m, _n0, _k) in enumerate(group):
+            toks[j, 0] = r.generated[-1]
+            toks[j, 1:] = drafted[i]
+            prefs[j] = pos
+            vids[j] = self._adapter_id(r.adapter)
+            rows_pt[j] = kv.tables[i]
+        # prefix width is always full: pos >= 1 (a prompt token plus the
+        # prefill-sampled first token are resident before any decode)
+        logits, new_pools = self._verify_paged(
+            tree, {"tokens": jnp.asarray(toks)}, kv.pools,
+            jnp.asarray(rows_pt), jnp.asarray(rows_pt),
+            jnp.asarray(lens), jnp.asarray(prefs), jnp.asarray(vids))
+        kv.pools = new_pools
+        self._step_spent += cm.verify_cost(g * w)
+        # --- accept: one fused sampler call over all g*w positions -------
+        flat = logits[:, :, :vocab].reshape((g * w, vocab))
+        flat_entries = []
+        for (_i, r, _sc, _pos, m, _n0, _k) in group:
+            sp = self._sampling_for(r)
+            seed = self._seed_for(r)
+            for t in range(w):
+                flat_entries.append((sp, seed, m + t))
+        temps, ks, ps, seeds, counters = sampling_lib.stack(flat_entries)
+        want_lp = any(self._sampling_for(r).logprobs
+                      for (_i, r, *_rest) in group)
+        target, chosen, top_ids, top_lps = self._sample_fn(
+            flat, temps, ks, ps, seeds, counters, want_logprobs=want_lp)
+        target = np.asarray(target).reshape((g, w))
+        if want_lp:
+            chosen = np.asarray(chosen).reshape((g, w))
+            top_ids = np.asarray(top_ids).reshape((g, w, -1))
+            top_lps = np.asarray(top_lps).reshape((g, w, -1))
+        handled: Dict[int, int] = {}
+        sum_a = 0
+        for j, (i, r, sc, pos, _m, n0, _k) in enumerate(group):
+            acc = accepted_prefix(drafted[i], target[j])
+            sp = self._sampling_for(r)
+            if sp.stop_token_ids:
+                for t, tok in enumerate(acc):
+                    if tok in sp.stop_token_ids:
+                        acc = acc[:t + 1]     # keep the stop id itself
+                        break
+            # slice BEFORE appending: remaining_tokens reads generated
+            acc = acc[:r.remaining_tokens]
+            a = len(acc)
+            n_lp = sp.logprobs
+            for t, tok in enumerate(acc):
+                r.generated.append(int(tok))
+                if want_lp and n_lp:
+                    r.logprobs.append(TokenLogprobs(
+                        int(tok), float(chosen[j, t]),
+                        tuple(int(x) for x in top_ids[j, t, :n_lp]),
+                        tuple(float(v) for v in top_lps[j, t, :n_lp])))
+            self.positions[i] = pos + a
+            # roll whole stale pages straight back to the pool (positions
+            # beyond pos+a-1 hold rejected-draft KV); max(n0, ...) keeps
+            # run()'s worst-case reservation intact (truncation is a no-op
+            # when the slot was already fully grown)
+            kv.truncate_slot(
+                i, max(n0, (pos + a - 1) // kv.page_size + 1))
+            handled[i] = a
+            sum_a += a
+        if self._obs:
+            tr = self._tracker
+            s = self._obs_step
+            tr.count("engine/spec/draft_tokens", k * g, step=s)
+            tr.count("engine/spec/accepted_tokens", sum_a, step=s)
+            for a in handled.values():
+                tr.histogram("engine/spec/accepted_len", a, step=s)
+            tr.gauge("engine/spec/accept_rate",
+                     (sum_a - g) / max(k * g, 1), step=s)
+        return handled
+
     def _finish_slot(self, slot: int, finished: List[Request], step: int,
                      reason: str = "length"):
         r = self.active[slot]
@@ -1192,7 +1473,7 @@ class ServeEngine:
         r.finish_reason = reason
         r.finish_step = step
         r.finish_cost = self._cost_clock
-        finished.append(r)
+        self._resolve_finished(r, finished)
         self._inflight.discard(r.uid)
         self.active[slot] = None
         self.positions[slot] = 0
@@ -1210,6 +1491,35 @@ class ServeEngine:
                 "tokens": len(r.generated),
                 "queueing_delay": r.queueing_delay,
                 "preemptions": r.preemptions, "slo_met": r.slo_met}, step=s)
+
+    def _resolve_finished(self, r: Request, finished: List[Request]) -> None:
+        """Deliver a completed/truncated request to the run's result list.
+        A branch of an ``n > 1`` fan-out resolves into its PARENT instead:
+        the parent is returned exactly once, after its last branch
+        completes or truncates, with aggregate flags (``done`` iff every
+        branch finished, ``truncated`` if any branch was) and the latest
+        branch finish stamps; per-branch outputs stay on
+        ``parent.branches``."""
+        parent = getattr(r, "_parent", None)
+        if parent is None:
+            finished.append(r)
+            return
+        if any(not (b.done or b.truncated) for b in parent.branches):
+            return
+        parent.done = all(b.done for b in parent.branches)
+        parent.truncated = any(b.truncated for b in parent.branches)
+        parent.finish_reason = "branches" if parent.done else None
+        admits = [b.admit_step for b in parent.branches
+                  if b.admit_step is not None]
+        parent.admit_step = min(admits) if admits else None
+        steps = [b.finish_step for b in parent.branches
+                 if b.finish_step is not None]
+        parent.finish_step = max(steps) if steps else None
+        costs = [b.finish_cost for b in parent.branches
+                 if b.finish_cost is not None]
+        parent.finish_cost = max(costs) if costs else None
+        self._inflight.discard(parent.uid)
+        finished.append(parent)
 
     def _observe_truncated(self, r: Request) -> None:
         """Count a request returned as a partial (run hit max_steps) — a
@@ -1244,6 +1554,17 @@ class ServeEngine:
     # -- request intake ----------------------------------------------------
     def _validate(self, r: Request) -> None:
         self._adapter_params(r.adapter)  # fail fast on unknown adapters
+        if r.n < 1:
+            raise ValueError(f"request {r.uid}: n must be >= 1, got {r.n}")
+        sc = r.spec if r.spec is not None else self.default_spec
+        if sc is not None and sc.k > 0:
+            if self.cache_mode != "paged":
+                raise ValueError(
+                    f"request {r.uid}: speculative decoding needs the "
+                    f"paged KV cache (verify runs paged_prefill over the "
+                    f"draft window; rollback releases window pages) — use "
+                    f"cache_mode='paged' or SpecConfig(k=0)")
+            self._adapter_params(sc.draft_adapter)  # unknown draft policy
         try:
             # rejects stop ids >= vocab_size, bad temperature/top_k/top_p,
             # logprobs beyond the sampler's fixed output width
@@ -1290,6 +1611,9 @@ class ServeEngine:
                 f"in-flight uids must be unique (admission_log/preemption "
                 f"bookkeeping is uid-keyed, duplicates would silently "
                 f"corrupt it)")
+        if request.n > 1:
+            self._submit_fanout(request, arrival_step)
+            return
         if request.generated or request.done or request.truncated:
             request.generated = []
             request.logprobs = []
@@ -1312,6 +1636,51 @@ class ServeEngine:
             else self.cost_model.steps_to_cost(request.arrival_step))
         self._inflight.add(request.uid)
         self.scheduler.push(request)
+
+    def _submit_fanout(self, request: Request,
+                       arrival_step: Optional[int]) -> None:
+        """Expand an ``n > 1`` request into ``n`` branch requests over one
+        prompt.  Branches are ordinary requests with tuple uids
+        ``(uid, b)`` and EXPLICIT per-branch seeds
+        (``fold_in(effective_seed, b)``), so every branch's draw stream is
+        a pure function of ``(parent seed, branch, position)`` — adding or
+        removing branches never shifts another branch's tokens.  Branch
+        page tables copy-on-write share the prompt pages through the
+        cache's content-hash prefix aliasing: the first branch to prefill
+        commits the prompt pages, later branches alias them and only their
+        generated-token pages diverge.  The parent itself is never served;
+        it resolves (once) when its last branch does — see
+        :meth:`_resolve_finished`."""
+        sp = self._sampling_for(request)
+        base_seed = sp.seed if sp.seed is not None \
+            else sampling_lib.derive_seed(self.sample_seed, request.uid)
+        request.generated = []
+        request.logprobs = []
+        request.done = False
+        request.truncated = False
+        request.finish_reason = None
+        request.admit_step = None
+        request.finish_step = None
+        request.finish_cost = None
+        request.preemptions = 0
+        request.branches = []
+        self._inflight.add(request.uid)
+        for b in range(request.n):
+            bsp = dataclasses.replace(
+                sp, seed=sampling_lib.branch_seed(base_seed, b))
+            br = Request(uid=(request.uid, b), prompt=request.prompt,
+                         max_new_tokens=request.max_new_tokens,
+                         adapter=request.adapter, sampling=bsp,
+                         priority=request.priority,
+                         deadline=request.deadline, spec=request.spec)
+            # inherit the deprecated step-basis deadline without re-firing
+            # its construction-time deprecation warning per branch
+            br.deadline_steps = request.deadline_steps
+            br._parent = request
+            request.branches.append(br)
+            self.submit(br, arrival_step=arrival_step, _validated=True)
+        request.arrival_step = request.branches[0].arrival_step
+        request.arrival_cost = request.branches[0].arrival_cost
 
     # -- serving -----------------------------------------------------------
     def run(self, requests: List[Request], max_steps: int = 512,
@@ -1441,27 +1810,53 @@ class ServeEngine:
             span = (self._tracker.time_block("engine/decode_step_s",
                                              step=self._obs_step)
                     if self._obs else NULL_SPAN)
+            #: slot -> tokens emitted this step (1 for plain decode,
+            #: accepted-length for speculative slots)
+            served: Dict[int, int] = {}
             with span:
-                rows, live = self._decode_live(tree, live, steps)
-                if live:
-                    # mid-prefill slots ride the batch as ghosts: None rows
-                    # draw no RNG and return no token (counter-based
-                    # sampling stays aligned with the one-shot engine)
+                spec_live = [i for i in live
+                             if self._spec_for(self.active[i]) is not None]
+                if spec_live:
+                    handled, demoted = self._spec_step(tree, spec_live,
+                                                       steps)
+                    served.update(handled)
+                    # demoted spec slots (window clamped below 1) decode
+                    # plainly this step; _spec_step may have suspended
+                    # slots under pool pressure — drop those
+                    plain = sorted(
+                        [i for i in live if i not in spec_live
+                         and self.active[i] is not None] + demoted)
+                else:
+                    plain = live
+                if plain:
+                    rows, plain = self._decode_live(tree, plain, steps)
+                if plain:
+                    # mid-prefill and spec-served slots ride the batch as
+                    # ghosts: None rows draw no RNG and return no token
+                    # (counter-based sampling stays aligned with the
+                    # one-shot engine)
                     reqs: List[Optional[Request]] = [None] * self.slots
-                    for i in live:
+                    for i in plain:
                         reqs[i] = self.active[i]
-                    toks = self._sample_rows(rows, reqs)
-            if live:
+                    toks = self._sample_rows(rows, reqs,
+                                             draft_rows=len(served))
+            if plain:
                 self._step_spent += cm.decode_step_cost
-            if self._obs and live:
-                self._observe_decode(live)
-            for i in live:
+                for i in plain:
+                    r = self.active[i]
+                    r.generated.append(int(toks[i]))
+                    self.positions[i] += 1
+                    served[i] = 1
+            if self._obs and served:
+                self._observe_decode(sorted(served), served)
+            for i in sorted(served):
                 r = self.active[i]
-                r.generated.append(int(toks[i]))
-                self.positions[i] += 1
+                if r is None:
+                    continue
                 if self._hit_stop(r):
-                    # stop id emitted: finish NOW — pages free this step
-                    # and the slot refills at the next admission pass
+                    # stop id emitted (possibly mid-verify-window): finish
+                    # NOW — pages free this step and the slot refills at
+                    # the next admission pass
                     self._finish_slot(i, finished, steps, reason="stop")
                 elif (len(r.generated) >= r.max_new_tokens
                         or self.positions[i] >= self.max_len - 1):
@@ -1470,7 +1865,7 @@ class ServeEngine:
                 self._tracker.gauge("engine/step_budget_utilization",
                                     self._step_spent / cm.step_budget,
                                     step=self._obs_step)
-            self.last_run_step_costs.append((self._step_spent, len(live)))
+            self.last_run_step_costs.append((self._step_spent, len(served)))
         #: engine iterations the last run took — the deterministic
         #: wave-serialization metric (a wave engine pays ~one full
         #: prefill+decode pass per adapter switch; per-slot batching doesn't)
@@ -1502,7 +1897,7 @@ class ServeEngine:
                     continue
                 r.truncated = True
                 self._observe_truncated(r)
-                finished.append(r)
+                self._resolve_finished(r, finished)
                 self._inflight.discard(r.uid)
                 self.active[i] = None
                 self.positions[i] = 0
@@ -1518,11 +1913,11 @@ class ServeEngine:
                     self.kv.release_pin(pin)
                     r._kv_pin = None
                 self._inflight.discard(r.uid)
-                finished.append(r)
+                self._resolve_finished(r, finished)
             for _, r in trace[next_arrival:]:
                 r.truncated = True
                 self._observe_truncated(r)
-                finished.append(r)
+                self._resolve_finished(r, finished)
         self._pending_trace_uids = set()
         self._step = 0
         self._cost_clock = 0.0

@@ -390,6 +390,26 @@ class PagedKVCache:
             self._owned[slot].append(p)
             self.n_pages[slot] += 1
 
+    def truncate_slot(self, slot: int, n_keep: int) -> None:
+        """Release ``slot``'s trailing pages beyond the first ``n_keep``
+        (speculative-decode rollback: pages grown to cover a draft window
+        whose tail was rejected go straight back to the pool).  Trailing
+        pages are always the slot's most recently grown ones — aliased
+        shared-prefix pages sit at the FRONT of the table — and releasing
+        goes through the refcount like any other release, so a page that
+        somehow became shared stays resident for its other owners."""
+        assert n_keep >= 1, f"slot {slot} must keep >= 1 page"
+        while self.n_pages[slot] > n_keep:
+            idx = int(self.n_pages[slot]) - 1
+            p = int(self.tables[slot, idx])
+            owned = self._owned[slot].pop()
+            assert owned == p, (
+                f"slot {slot} table/_owned order diverged at page index "
+                f"{idx}: owned {owned} vs table {p}")
+            self.tables[slot, idx] = TRASH_PAGE
+            self.n_pages[slot] -= 1
+            self._release(p)
+
     def free_slot(self, slot: int) -> None:
         for p in self._owned[slot]:
             self._release(p)

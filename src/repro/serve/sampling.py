@@ -158,6 +158,17 @@ def derive_seed(base_seed: int, uid: int) -> int:
     return int(x & 0x7FFFFFFF)
 
 
+def branch_seed(seed: int, branch: int) -> int:
+    """Per-branch RNG seed for ``n > 1`` parallel completions:
+    ``fold_in(PRNGKey(seed), branch)``, keeping the whole fan-out a pure
+    function of ``(seed, branch)`` — the same counter-RNG discipline the
+    per-token draws use, so branch streams are independent yet fully
+    reproducible across admission order and preemption."""
+    key = jax.random.fold_in(jax.random.PRNGKey(np.uint32(seed)),
+                             int(branch))
+    return int(np.asarray(jax.random.key_data(key)).ravel()[-1])
+
+
 def stack(entries: Sequence[Tuple[SamplingParams, int, int]]):
     """Stack ``(params, effective_seed, counter)`` rows into the per-slot
     device arrays :func:`sample_tokens` consumes.  Parameters become array
@@ -177,7 +188,7 @@ def stack(entries: Sequence[Tuple[SamplingParams, int, int]]):
     return temps, top_ks, top_ps, seeds, counters
 
 
-def record_occupancy(tracker, reqs, step=None) -> None:
+def record_occupancy(tracker, reqs, step=None, draft_rows: int = 0) -> None:
     """Fused-sampler batch occupancy metrics (:mod:`repro.obs`).
 
     The sampler always draws over the full ``(slots,)`` row set — dead
@@ -185,13 +196,18 @@ def record_occupancy(tracker, reqs, step=None) -> None:
     discarded — so occupancy (live rows / total rows) is the fraction of
     fused-sampler work that produces a consumed token.  ``reqs`` is the
     per-row request list the engine passes to its sampler (None = ghost
-    row).  Pure host-side bookkeeping over values the engine already had.
-    """
+    row).  ``draft_rows`` is how many of the None rows belong to slots a
+    speculative-decode pass already served this step: their tokens came
+    from the spec path (counted under ``engine/spec/*``), so they are
+    excluded from both the ghost count and the occupancy denominator
+    rather than inflating ghost-row waste.  Pure host-side bookkeeping
+    over values the engine already had."""
     live = sum(r is not None for r in reqs)
     tracker.histogram("sampler/batch_occupancy",
-                      live / max(len(reqs), 1), step=step)
+                      live / max(len(reqs) - draft_rows, 1), step=step)
     tracker.count("sampler/live_rows", live, step=step)
-    tracker.count("sampler/ghost_rows", len(reqs) - live, step=step)
+    tracker.count("sampler/ghost_rows", len(reqs) - live - draft_rows,
+                  step=step)
 
 
 def _candidates(z, top_k, top_p):

@@ -75,6 +75,10 @@ class TokenCostModel:
     prefill_token_cost: float = 0.0
     prefill_fixed_cost: float = 0.0
     step_budget: Optional[float] = None
+    #: cost of one speculative DRAFT decode step (None: priced like a full
+    #: decode step — conservative; a calibrated model sets it below
+    #: ``decode_step_cost`` to reflect the cheap base/low-rank draft path)
+    draft_step_cost: Optional[float] = None
 
     def __post_init__(self):
         if self.decode_step_cost <= 0:
@@ -82,6 +86,9 @@ class TokenCostModel:
                              f"{self.decode_step_cost}")
         if self.prefill_token_cost < 0 or self.prefill_fixed_cost < 0:
             raise ValueError("prefill costs must be >= 0")
+        if self.draft_step_cost is not None and self.draft_step_cost <= 0:
+            raise ValueError(f"draft_step_cost must be > 0 or None, got "
+                             f"{self.draft_step_cost}")
         if self.step_budget is not None and self.step_budget <= 0:
             raise ValueError(f"step_budget must be > 0, got "
                              f"{self.step_budget}")
@@ -96,6 +103,19 @@ class TokenCostModel:
     def prefill_cost(self, tokens: int) -> float:
         """Cost of one prefill call over ``tokens`` suffix tokens."""
         return self.prefill_fixed_cost + tokens * self.prefill_token_cost
+
+    def draft_cost(self, k: int) -> float:
+        """Cost of drafting ``k`` speculative tokens (``k`` chained draft
+        decode steps, fused into one dispatch by the engine)."""
+        c = self.draft_step_cost if self.draft_step_cost is not None \
+            else self.decode_step_cost
+        return k * c
+
+    def verify_cost(self, tokens: int) -> float:
+        """Cost of one speculative verify pass over ``tokens`` total
+        window positions: one decode-step dispatch plus prefill-rate token
+        work (the verify IS a short multi-position prefill)."""
+        return self.decode_step_cost + tokens * self.prefill_token_cost
 
     @classmethod
     def calibrate(cls, decode_step_s: float, prefill_token_s: float,
@@ -201,10 +221,12 @@ class StreamScheduler:
         count get the historical step-based slack bit-for-bit.  Remaining
         work is one decode step's cost per token left to generate (prefill
         rides the admission step) — an upper bound: a ``stop_token_ids``
-        hit finishes sooner, which only ever improves true slack, so
-        early-finishing requests are never preempted for on behalf of a
-        request that didn't need it.  Infinite for requests without a
-        deadline.
+        hit finishes sooner, and a speculative-decode window accepts
+        SEVERAL of those tokens per engine step (``remaining_tokens``
+        counts accepted tokens, not steps), both of which only ever
+        improve true slack, so early-finishing requests are never
+        preempted for on behalf of a request that didn't need it.
+        Infinite for requests without a deadline.
 
         Requests carry either the new cost-basis ``deadline`` or the
         deprecated step-basis ``deadline_steps``; the latter converts

@@ -1,0 +1,84 @@
+"""Speculative decoding: draft-policy configuration + the acceptance rule.
+
+**Scheme (coupled counter-RNG rejection).**  Each engine step, a slot with
+a :class:`SpecConfig` drafts ``k`` tokens with a cheap path (the frozen
+base weights, or any registered adapter — e.g. a low-rank-only slice of
+the serving adapter), then verifies all ``k + 1`` window positions in ONE
+batched target pass over the paged KV (``paged_prefill`` with
+``all_logits=True``).  Both the draft proposal and the target draw for
+generated-token index ``n`` use the SAME counter-based RNG stream —
+``fold_in(PRNGKey(seed), n)`` (see :mod:`repro.serve.sampling`) — so the
+target draw ``t_i`` at window position ``i`` is *exactly* the token the
+non-speculative engine would emit at that index.  Acceptance is therefore
+pure token equality (:func:`accepted_prefix`): accept draft tokens while
+they match the target draws; the first mismatch position still yields its
+target draw, and a fully-matched window yields the bonus ``k + 1``-th
+target draw.  Accepted length is always in ``[1, k + 1]``.
+
+**Exactness.**  By induction over accepted tokens: the verify pass
+computes target logits at window position ``i`` from the committed prefix
+KV (positions ``< pos``, all target-written) plus the in-pass window
+keys/values — never from the draft model's KV writes — so its logits
+equal the non-speculative decode-path logits for the same context, and
+the shared counter stream turns equal logits into equal draws.  Greedy
+requests are bit-identical to non-speculative decode; sampled requests
+draw from the identical ``(seed, position)`` stream and distribution,
+regardless of acceptance length, preemption, or co-batch mix.
+
+**When speculation loses.**  Low acceptance (a draft policy far from the
+target — e.g. base drafts against a heavily fine-tuned adapter) wastes
+the draft FLOPs and the rolled-back page growth; windows that never fit
+the pool demote to plain decode.  See docs/serving.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+#: draft policy meaning "decode the draft with the engine's merged base
+#: weights" (bank id 0 — no adapter delta applied)
+BASE_DRAFT = "base"
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Per-request speculative-decode control (frozen: share freely).
+
+    ``k``: draft window — tokens proposed per engine step.  ``0`` disables
+    speculation (useful to opt a request out of an engine-wide default).
+    The engine clamps the effective window per step so a request never
+    drafts past ``max_new_tokens`` or the slot's page capacity.
+
+    ``draft_adapter``: name of the registered adapter the draft path
+    decodes with.  The default :data:`BASE_DRAFT` serves the frozen base
+    weights; registering a low-rank-only slice of the target adapter and
+    naming it here gives a closer (still cheap) proposal distribution.
+    """
+
+    k: int = 4
+    draft_adapter: str = BASE_DRAFT
+
+    def __post_init__(self):
+        if self.k < 0:
+            raise ValueError(f"spec k must be >= 0 (0 = off), got {self.k}")
+
+
+def accepted_prefix(draft: Sequence[int], target: Sequence[int]
+                    ) -> List[int]:
+    """The tokens one speculative window emits.
+
+    ``draft`` is the ``k`` drafted proposals ``d_1..d_k``; ``target`` is
+    the ``k + 1`` per-position target draws ``t_0..t_k`` from the verify
+    pass (``t_i`` drawn with RNG counter ``m + i`` where ``m`` is the
+    request's generated length at window start).  ``t_0`` is always
+    emitted — it is the step's guaranteed token.  Draft ``d_{i+1}`` is
+    accepted iff it equals ``t_i`` (the coupled-RNG rejection rule), which
+    validates the next target draw ``t_{i+1}``; the first mismatch stops
+    the window.  Returns 1 to ``k + 1`` tokens, each exactly what the
+    non-speculative engine would have emitted."""
+    out = [int(target[0])]
+    for i, d in enumerate(draft):
+        if int(d) != int(target[i]):
+            break
+        out.append(int(target[i + 1]))
+    return out

@@ -10,7 +10,8 @@ import pytest
 from benchmarks.common import nudge_psoft
 from repro.configs import get_config
 from repro.models import model as model_lib
-from repro.serve import OutOfPages, PagedKVCache, Request, ServeEngine
+from repro.serve import (
+    OutOfPages, PagedKVCache, Request, ServeEngine, TRASH_PAGE)
 
 
 @pytest.fixture(scope="module")
@@ -343,3 +344,107 @@ def test_sampling_seeded_and_greedy_bit_identical(setup):
     assert s0 != s1
     # near-zero temperature collapses to greedy
     assert run_engine(False, 3, temperature=1e-7) == run_engine(True, 0)
+
+
+# -- speculative rollback + copy-on-write fork schedules ---------------------
+
+try:                                       # optional dep: property-based
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                        # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def test_truncate_slot_rollback_conservation():
+    """Speculative-window rollback: pages grown past a rejected draft tail
+    go straight back to the free list, refcount-correctly, without ever
+    touching aliased prefix pages (they sit at the table FRONT)."""
+    cfg = get_config("tiny")
+    kv = PagedKVCache(cfg, slots=2, max_len=32, page_size=4, num_pages=10)
+    prompt = np.arange(9, dtype=np.int32)            # 2 full pages + 1
+    kv.admit(0, prompt, "base")
+    kv.commit_prompt(0, prompt, "base")
+    n0, used0 = int(kv.n_pages[0]), kv.pages_in_use()
+    kv.ensure_position(0, 18)                        # draft window growth
+    assert int(kv.n_pages[0]) == 5 > n0
+    kv.truncate_slot(0, n0)                          # window tail rejected
+    assert int(kv.n_pages[0]) == n0 and kv.pages_in_use() == used0
+    assert kv.conservation()["conserved"]
+    # a CoW fork aliasing the committed prompt keeps the shared pages
+    # resident through the OTHER slot's truncate + free
+    kv.admit(1, prompt, "base")
+    assert list(kv.tables[1, :2]) == list(kv.tables[0, :2])
+    kv.ensure_position(1, 14)
+    kv.truncate_slot(1, int((9 - 1) // 4) + 1)       # back to prompt pages
+    kv.free_slot(1)
+    assert kv.pages_in_use() == used0, "fork rollback harmed shared pages"
+    assert (kv.tables[0, :3] != TRASH_PAGE).all()
+    kv.free_slot(0)
+    assert kv.pages_in_use() == 0 and kv.conservation()["conserved"]
+    with pytest.raises(AssertionError, match="keep >= 1"):
+        kv.truncate_slot(0, 0)
+
+
+def _run_cow_schedule(codes):
+    """Interpret ``codes`` as a fork/grow/truncate/free/suspend/resume
+    schedule over slots sharing one committed prompt (the n>1 parallel-
+    sampling shape), asserting page-refcount + free-list conservation
+    after EVERY op and a fully-drained pool at the end."""
+    cfg = get_config("tiny")
+    kv = PagedKVCache(cfg, slots=3, max_len=32, page_size=4, num_pages=10)
+    prompt = np.arange(9, dtype=np.int32)
+    state = {}                    # slot -> ("active" | pin-token)
+
+    def check():
+        snap = kv.conservation()
+        assert snap["conserved"], f"conservation broke: {snap}"
+        assert kv.pages_in_use() <= kv.num_pages - 1
+
+    for c in codes:
+        slot, op = c % 3, (c // 3) % 6
+        st_ = state.get(slot)
+        try:
+            if op == 0 and st_ is None:              # fork a branch
+                kv.admit(slot, prompt, "base")
+                kv.commit_prompt(slot, prompt, "base")
+                state[slot] = "active"
+            elif op == 1 and st_ == "active":        # decode/window growth
+                kv.ensure_position(
+                    slot, min(int(kv.n_pages[slot]) * 4, 31))
+            elif op == 2 and st_ == "active":        # speculative rollback
+                kv.truncate_slot(slot, max(int(kv.n_pages[slot]) - 1, 3))
+            elif op == 3 and st_ == "active":        # branch finished
+                kv.free_slot(slot)
+                state.pop(slot)
+            elif op == 4 and st_ == "active":        # preempt
+                state[slot] = kv.suspend_slot(slot, prompt, "base")
+            elif op == 5 and st_ is not None and st_ != "active":
+                kv.resume_slot(slot, prompt, "base", pin=st_)
+                state[slot] = "active"
+        except OutOfPages:
+            pass                  # must still be conservation-clean
+        check()
+    for slot, st_ in list(state.items()):
+        if st_ == "active":
+            kv.free_slot(slot)
+        else:
+            kv.release_pin(st_)
+    check()
+    assert kv.pages_in_use() == 0, "schedule leaked referenced pages"
+
+
+def test_cow_fork_schedules_conserve_pages():
+    """Deterministic CoW fork/free/suspend/resume schedules (the
+    hypothesis fallback — always runs, no optional dep)."""
+    rng = np.random.default_rng(23)
+    for _ in range(6):
+        _run_cow_schedule(rng.integers(0, 18, size=40).tolist())
+
+
+if HAVE_HYPOTHESIS:                                    # pragma: no cover
+    @settings(max_examples=30, deadline=None)
+    @given(codes=st.lists(st.integers(min_value=0, max_value=17),
+                          max_size=60))
+    def test_cow_fork_schedules_conserve_pages_property(codes):
+        _run_cow_schedule(codes)

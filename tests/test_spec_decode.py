@@ -1,0 +1,306 @@
+"""Speculative decoding + parallel sampling: token identity with the
+plain engine (greedy AND sampled, across draft lengths, adapters,
+preemption), window clamping at request/sequence limits (never overshoot
+``max_new_tokens`` mid-verify-window), KV rollback page conservation,
+``n > 1`` fan-out over copy-on-write shared prompt pages, obs counters,
+and validation fail-fasts."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from benchmarks.common import nudge_psoft
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.obs import InMemoryTracker
+from repro.serve import (
+    Request, SamplingParams, ServeEngine, SpecConfig)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(params, cfg, **kw):
+    kw.setdefault("num_pages", 13)
+    eng = ServeEngine(params, cfg, max_len=48, slots=2, cache_mode="paged",
+                      page_size=8, **kw)
+    # near-identity adapter: a distinct param tree the base-weights draft
+    # can speculate for with a useful acceptance rate
+    eng.register_adapter("tuned", nudge_psoft(params, 1e-4), cfg.peft)
+    return eng
+
+
+def _requests(cfg, n=3, max_new=10, adapter="base", sampling=None, spec=None):
+    return [Request(uid=u,
+                    prompt=(np.arange(6) * 5 + 13 * u + 1) % cfg.vocab_size,
+                    max_new_tokens=max_new, adapter=adapter,
+                    sampling=sampling if sampling is None
+                    else dataclasses.replace(sampling, seed=7 + u),
+                    spec=spec)
+            for u in range(n)]
+
+
+def _outputs(engine, reqs, **kw):
+    done = engine.run(reqs, **kw)
+    assert engine.kv.pages_in_use() == 0, "run leaked pages"
+    return {r.uid: list(r.generated) for r in done}
+
+
+# -- token identity ----------------------------------------------------------
+
+def test_spec_greedy_identity_across_k(setup):
+    """The acceptance bar: greedy speculative decode is BIT-IDENTICAL to
+    the plain engine for every draft length, while finishing in strictly
+    fewer engine steps (the >1 accepted token per step claim)."""
+    cfg, params = setup
+    base = _engine(params, cfg)
+    ref = _outputs(base, _requests(cfg))
+    base_steps = base.last_run_steps
+    for k in (1, 2, 3, 5):
+        eng = _engine(params, cfg, spec=SpecConfig(k=k))
+        got = _outputs(eng, _requests(cfg))
+        assert got == ref, f"spec k={k} diverged from plain decode"
+        assert eng.last_run_steps < base_steps, \
+            f"spec k={k} took {eng.last_run_steps} steps vs {base_steps}"
+
+
+def test_spec_sampled_identity_with_logprobs(setup):
+    """Seeded stochastic sampling is also bit-identical: target draws ride
+    the SAME ``fold_in(seed, generation_index)`` counter streams a plain
+    engine uses, so acceptance never shifts later draws.  Logprobs of the
+    accepted tokens match the plain engine's too."""
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.8, top_k=40, seed=7, logprobs=2)
+
+    def key(done):
+        return {r.uid: (list(r.generated),
+                        [(l.token, round(l.logprob, 4)) for l in r.logprobs])
+                for r in done}
+
+    base = _engine(params, cfg)
+    ref = key(base.run(_requests(cfg, sampling=sp)))
+    eng = _engine(params, cfg, spec=SpecConfig(k=3))
+    got = key(eng.run(_requests(cfg, sampling=sp)))
+    assert got == ref
+
+
+def test_spec_draft_policy_identity(setup):
+    """Both draft policies — base weights and a (near-identity) low-rank
+    adapter — produce identical outputs for tuned-adapter requests: the
+    draft model only moves the acceptance rate, never the tokens."""
+    cfg, params = setup
+    base = _engine(params, cfg)
+    ref = _outputs(base, _requests(cfg, adapter="tuned"))
+    for draft in ("base", "tuned"):
+        eng = _engine(params, cfg, spec=SpecConfig(k=3, draft_adapter=draft))
+        got = _outputs(eng, _requests(cfg, adapter="tuned"))
+        assert got == ref, f"draft policy {draft!r} changed tuned outputs"
+
+
+def test_spec_preemption_identity(setup):
+    """Pool pressure mid-run (suspension + retained-KV resume) does not
+    change what any request generates, with speculation on."""
+    cfg, params = setup
+
+    def serve(spec):
+        eng = _engine(params, cfg, num_pages=7, spec=spec)
+        reqs = [Request(uid=u, prompt=(np.arange(9) + 11 * u) %
+                        cfg.vocab_size, max_new_tokens=14)
+                for u in range(3)]
+        done = eng.run_stream([(1 + i, r) for i, r in enumerate(reqs)],
+                              max_steps=400)
+        assert all(r.done for r in done)
+        assert eng.kv.pages_in_use() == 0
+        return {r.uid: list(r.generated) for r in done}, eng
+
+    ref, _ = serve(None)
+    got, eng = serve(SpecConfig(k=3))
+    assert got == ref, "speculation diverged under pool pressure"
+
+
+def test_spec_cobatch_mix_and_opt_out(setup):
+    """Per-request spec knobs in one co-batch: a ``SpecConfig(k=0)``
+    request opts out of an engine-wide default and decodes plainly
+    alongside speculating batchmates — everyone's tokens stay identical
+    to the all-plain engine."""
+    cfg, params = setup
+    base = _engine(params, cfg)
+    ref = _outputs(base, _requests(cfg, n=2))
+    eng = _engine(params, cfg, spec=SpecConfig(k=2))
+    reqs = _requests(cfg, n=2)
+    reqs[0].spec = SpecConfig(k=0)           # opt out
+    reqs[1].spec = SpecConfig(k=3)           # override the default
+    got = _outputs(eng, reqs)
+    assert got == ref
+
+
+# -- window clamping ---------------------------------------------------------
+
+def test_spec_never_overshoots_max_new_tokens(setup):
+    """Regression: a request finishing mid-verify-window emits EXACTLY its
+    budget.  The draft length clamps to ``remaining_tokens - 1`` (a full
+    accept emits k+1 tokens) and the accepted prefix is sliced before any
+    token lands, so no (max_new, k) pairing can overshoot."""
+    cfg, params = setup
+    for max_new in (1, 2, 5, 7):
+        eng = _engine(params, cfg, spec=SpecConfig(k=3))
+        done = eng.run(_requests(cfg, max_new=max_new))
+        for r in done:
+            assert len(r.generated) == max_new, \
+                f"max_new={max_new}: emitted {len(r.generated)}"
+            assert r.finish_reason == "length"
+        assert eng.kv.pages_in_use() == 0
+
+
+def test_spec_stop_token_mid_window(setup):
+    """A stop id accepted mid-window truncates the window AT the stop
+    (stop included, as in plain decode) and finishes the request with
+    reason "stop" — identical to the plain engine with the same stops."""
+    cfg, params = setup
+    probe = _engine(params, cfg).run(_requests(cfg, n=1, max_new=10))
+    stop = int(probe[0].generated[3])
+    sp = SamplingParams(temperature=0.0, stop_token_ids=(stop,))
+    base = _engine(params, cfg)
+    ref = base.run(_requests(cfg, n=1, max_new=10, sampling=sp))
+    eng = _engine(params, cfg, spec=SpecConfig(k=4))
+    got = eng.run(_requests(cfg, n=1, max_new=10, sampling=sp))
+    assert [list(r.generated) for r in got] == \
+        [list(r.generated) for r in ref]
+    (r,) = got
+    assert r.finish_reason == "stop" and r.generated[-1] == stop
+    assert eng.kv.pages_in_use() == 0
+
+
+# -- parallel sampling (n > 1) -----------------------------------------------
+
+def test_fanout_parent_resolves_once_with_distinct_branches(setup):
+    """``n=3`` returns the PARENT exactly once after its last branch, with
+    three distinct seeded completions on ``parent.branches``, prompt pages
+    shared copy-on-write (prefix-alias hits observed), and zero leaked
+    pages."""
+    cfg, params = setup
+    eng = _engine(params, cfg)
+    # prompt spans 2 FULL pages (+1 boundary page): aliasing shares full
+    # pages only, so the branches' CoW fork is actually observable
+    par = Request(uid=100, prompt=np.arange(20) % cfg.vocab_size,
+                  max_new_tokens=8,
+                  sampling=SamplingParams(temperature=0.9, top_k=50,
+                                          seed=11), n=3)
+    done = eng.run([par])
+    assert done == [par] and par.done
+    assert par.finish_reason == "branches" and not par.generated
+    outs = [tuple(b.generated) for b in par.branches]
+    assert len(outs) == 3 and all(len(o) == 8 for o in outs)
+    assert len(set(outs)) == 3, f"branches not seed-distinct: {outs}"
+    assert eng.kv.stats["prefix_hits"] > 0, \
+        "branches did not alias shared prompt pages"
+    assert eng.kv.pages_in_use() == 0
+
+
+def test_fanout_greedy_branches_equal_single(setup):
+    """Greedy fan-out is n identical copies of the single-request output
+    (branch seeds only matter to stochastic draws)."""
+    cfg, params = setup
+    eng = _engine(params, cfg)
+    single = eng.run([Request(uid=5, prompt=np.arange(8) % cfg.vocab_size,
+                              max_new_tokens=8)])[0]
+    par = Request(uid=6, prompt=np.arange(8) % cfg.vocab_size,
+                  max_new_tokens=8, sampling=SamplingParams.greedy(), n=2)
+    eng.run([par])
+    for b in par.branches:
+        assert list(b.generated) == list(single.generated)
+
+
+def test_fanout_with_speculation(setup):
+    """Speculation composes with fan-out: greedy spec branches still equal
+    the plain single-request output, in fewer steps."""
+    cfg, params = setup
+    base = _engine(params, cfg)
+    single = base.run([Request(uid=5, prompt=np.arange(8) % cfg.vocab_size,
+                               max_new_tokens=8)])[0]
+    eng = _engine(params, cfg, spec=SpecConfig(k=3))
+    par = Request(uid=6, prompt=np.arange(8) % cfg.vocab_size,
+                  max_new_tokens=8, sampling=SamplingParams.greedy(), n=2)
+    eng.run([par])
+    for b in par.branches:
+        assert list(b.generated) == list(single.generated)
+    assert eng.last_run_steps < base.last_run_steps
+    assert eng.kv.pages_in_use() == 0
+
+
+def test_fanout_truncation_returns_parent_once(setup):
+    """A truncated run still resolves the parent exactly once (truncated,
+    not done), never leaking branch bookkeeping."""
+    cfg, params = setup
+    eng = _engine(params, cfg)
+    par = Request(uid=9, prompt=np.arange(8) % cfg.vocab_size,
+                  max_new_tokens=12, n=3)
+    with pytest.warns(UserWarning, match="max_steps"):
+        done = eng.run([par], max_steps=3)
+    assert done == [par]
+    assert par.truncated and not par.done and par.finish_reason is None
+
+
+# -- observability -----------------------------------------------------------
+
+def test_spec_obs_counters_and_ghost_accounting(setup):
+    """Spec metrics land under ``engine/spec/*`` (draft/accepted token
+    counts, per-slot accepted-length histogram, accept-rate gauge) and
+    spec-served rows are NOT miscounted as ghost sampler rows."""
+    cfg, params = setup
+    tr = InMemoryTracker()
+    eng = _engine(params, cfg, spec=SpecConfig(k=3), tracker=tr)
+    # the plain batchmate finishes first, so every plain decode step has
+    # the spec slot riding as a draft row — ghost_rows must stay 0
+    reqs = _requests(cfg, n=2, max_new=12)
+    reqs[0].spec = SpecConfig(k=0)
+    reqs[0].max_new_tokens = 4
+    eng.run(reqs)
+    assert tr.counter("engine/spec/draft_tokens") > 0
+    acc = tr.counter("engine/spec/accepted_tokens")
+    # 11 of the 12 tokens come off the spec path (the first was sampled
+    # at prefill, as in plain decode)
+    assert acc >= 11, f"spec slot's decode tokens must be spec-accepted: " \
+        f"{acc}"
+    lens = tr.values("engine/spec/accepted_len")
+    assert lens and all(1 <= a <= 4 for a in lens), lens
+    assert tr.counter("sampler/ghost_rows") == 0, \
+        "spec-served rows counted as ghost sampler rows"
+    mean_accept = acc / max(len(lens), 1)
+    assert mean_accept > 1.0, f"mean accepted len {mean_accept} <= 1"
+
+
+# -- validation --------------------------------------------------------------
+
+def test_spec_validation_failfast(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="spec k"):
+        SpecConfig(k=-1)
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(params, cfg, max_len=48, slots=2, cache_mode="dense",
+                    spec=SpecConfig(k=2))
+    dense = ServeEngine(params, cfg, max_len=48, slots=2, cache_mode="dense")
+    with pytest.raises(ValueError, match="paged"):
+        dense.run(_requests(get_config("tiny"), n=1, spec=SpecConfig(k=2)))
+    eng = _engine(params, cfg)
+    with pytest.raises(KeyError, match="unknown adapter"):
+        eng.run(_requests(cfg, n=1,
+                          spec=SpecConfig(k=2, draft_adapter="nope")))
+    with pytest.raises(ValueError, match="n must be"):
+        eng.run([Request(uid=0, prompt=np.arange(4), n=0)])
+
+
+def test_spec_k0_is_plain_decode(setup):
+    """``SpecConfig(k=0)`` engine-wide is exactly the plain engine — same
+    tokens, same step count."""
+    cfg, params = setup
+    base = _engine(params, cfg)
+    ref = _outputs(base, _requests(cfg))
+    eng = _engine(params, cfg, spec=SpecConfig(k=0))
+    got = _outputs(eng, _requests(cfg))
+    assert got == ref and eng.last_run_steps == base.last_run_steps
