@@ -8,7 +8,7 @@ PSOFT ≈ LoRA-XS < LoRA < OFT < BOFT < GOFT (Appendix E).
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_row, method_cfgs
+from benchmarks.common import bench_row, method_cfgs
 from repro.core import peft
 
 
@@ -55,7 +55,7 @@ def main():
     for name in order:
         tb = block_step_temp_bytes(cfgs[name])
         results[name] = tb
-        csv_row(f"act_mem_{name}", 0, f"{tb/2**20:.2f}MiB")
+        bench_row(f"act_mem_{name}", tb / 2**20, unit="MiB")
     # Appendix E ordering (coarse): subspace methods below full-space OFT
     assert results["psoft"] < results["oft"], results
     assert results["psoft"] < results["boft"], results

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import bench_row
 from repro.configs import TrainConfig, get_config
 from repro.data import DataConfig, SyntheticLMDataset
 from repro.optim import adamw
@@ -51,14 +51,14 @@ def finetune(cfg, base, method, rank, steps=60, lr=5e-3):
 def main():
     cfg = get_config("tiny")
     base, pre_loss = pretrain(cfg)
-    csv_row("convergence_pretrain", 0, f"loss={pre_loss:.3f}")
+    bench_row("convergence_pretrain", pre_loss, unit="loss")
     rows = {}
     for method, rank in (("psoft", 46), ("lora", 4), ("pissa", 4),
                          ("lora_xs", 16), ("oft", 8)):
         n, first, last = finetune(cfg, base, method, rank)
         rows[method] = (n, first, last)
-        csv_row(f"convergence_{method}", 0,
-                f"params={n};first={first:.3f};final={last:.3f}")
+        bench_row(f"convergence_{method}", last, unit="loss",
+                  params=n, first=f"{first:.3f}")
     # everything learns the shifted task
     for m, (n, first, last) in rows.items():
         assert last < first + 0.02, (m, first, last)

@@ -14,7 +14,7 @@ Two numbers per method:
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_row, timeit
+from benchmarks.common import bench_row, timeit
 from repro.configs.base import PEFTConfig
 from repro.core import peft
 
@@ -35,8 +35,8 @@ def main(quick: bool = False):
         jitted = jax.jit(lambda pp, xx: peft.apply_linear(pp, xx, cfg,
                                                           jnp.float32))
         t_jit = timeit(jitted, p, x, iters=20, warmup=3)
-        csv_row(f"dispatch_trace_{m}", t_tr * 1e6)
-        csv_row(f"dispatch_jit_{m}", t_jit * 1e6)
+        bench_row(f"dispatch_trace_{m}", t_tr * 1e6)
+        bench_row(f"dispatch_jit_{m}", t_jit * 1e6)
     # resolution alone (per-call python overhead at trace time)
     cfg = PEFTConfig(method="psoft", rank=16,
                      target_modules={"q": "psoft", "up": "lora"})
@@ -45,7 +45,7 @@ def main(quick: bool = False):
     from repro.core import registry
     t_res = timeit(lambda: registry.resolve(p, cfg, module="q"),
                    iters=200, warmup=20)
-    csv_row("dispatch_resolve_only", t_res * 1e6)
+    bench_row("dispatch_resolve_only", t_res * 1e6)
 
 
 if __name__ == "__main__":

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import bench_row
 from repro.configs.base import PEFTConfig
 from repro.core import peft, psoft
 
@@ -61,7 +61,7 @@ def main():
         cosines(peft.merge_linear(pr, rcfg)) - cosines(w))))
 
     for k, v in rows.items():
-        csv_row(f"geometry_{k}", 0, f"{v:.5f}")
+        bench_row(f"geometry_{k}", v, unit="value")
 
     assert rows["psoft_strict_pri"] < 1e-3, rows
     assert rows["psoft_final"] < rows["lora_final_same_norm"], rows

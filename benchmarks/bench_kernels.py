@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import bench_row
 from repro.core import cayley, psoft
 from repro.kernels import ops, ref
 
@@ -27,22 +27,22 @@ def main():
     if isinstance(cost_u, list):
         cost_u = cost_u[0]
     ba_u = cost_u.get("bytes accessed", 0)
-    csv_row("psoft_unfused_xla", 0, f"bytes_accessed={ba_u:.3g}")
+    bench_row("psoft_unfused_xla", ba_u, unit="bytes_accessed")
 
     # parity of the fused kernel (interpret mode)
     y_fused = ops.psoft_matmul(x, p, compute_dtype=jnp.float32)
     y_ref = unfused(x)
     err = float(jnp.max(jnp.abs(y_fused - y_ref)))
-    csv_row("psoft_fused_pallas", 0, f"maxerr_vs_xla={err:.2e}")
+    bench_row("psoft_fused_pallas", err, unit="maxerr_vs_xla")
     assert err < 1e-3
 
     # analytic HBM traffic: fused reads x + W_res + A + B once and writes y;
     # unfused writes/reads the intermediate y_res and u tensors through HBM
     fused_bytes = 4 * (m * k + k * n + k * r + r * n + m * n)
     unfused_bytes = fused_bytes + 4 * (2 * m * n + 3 * m * r)
-    csv_row("psoft_fused_analytic", 0,
-            f"hbm_bytes={fused_bytes};unfused={unfused_bytes};"
-            f"saving={1 - fused_bytes/unfused_bytes:.1%}")
+    bench_row("psoft_fused_analytic", fused_bytes, unit="hbm_bytes",
+              unfused=unfused_bytes,
+              saving=f"{1 - fused_bytes/unfused_bytes:.1%}")
     print("# fused-kernel parity PASS")
 
 

@@ -7,7 +7,7 @@ Pallas on-chip kernel in interpret mode).
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_row, timeit
+from benchmarks.common import bench_row, timeit
 from repro.core import cayley
 from repro.kernels import ops
 
@@ -24,15 +24,16 @@ def main():
         rot = fn(q)
         err = float(jnp.linalg.norm(rot - exact))
         orth = float(cayley.orthogonality_error(rot))
-        csv_row(f"neumann_K{k}", t, f"err={err:.2e};orth={orth:.2e}")
+        bench_row(f"neumann_K{k}", t, err=f"{err:.2e}",
+                  orth=f"{orth:.2e}")
         if err_prev is not None:
             assert err <= err_prev + 1e-9, "error must decrease with K"
         err_prev = err
     t_exact = timeit(jax.jit(lambda qq: cayley.cayley_exact(qq, r)), q) * 1e6
-    csv_row("cayley_exact", t_exact, "err=0")
+    bench_row("cayley_exact", t_exact, err="0")
     t_kernel = timeit(lambda: ops.cayley_neumann(q, r, 5)) * 1e6
-    csv_row("cayley_pallas_interpret_K5", t_kernel,
-            "(CPU interpret; on-TPU the series stays in VMEM)")
+    bench_row("cayley_pallas_interpret_K5", t_kernel,
+              note="CPU interpret; on-TPU the series stays in VMEM")
     assert err < 1e-2
     print("# Fig 8b anchors PASS: error decreases with K, K=5 near-exact")
 

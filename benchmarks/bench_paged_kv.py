@@ -22,7 +22,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import csv_row, nudge_psoft
+from benchmarks.common import bench_row, nudge_psoft
 from repro.configs import get_config
 from repro.models import model as model_lib
 from repro.serve import Request, ServeEngine
@@ -75,10 +75,12 @@ def main(quick: bool = False):
     paged = _engine(params, cfg, "paged", slots, page_size=PAGE)
     dt_d, tok_d, steps_d = _run(dense, _requests(cfg, n_req, max_new))
     dt_p, tok_p, steps_p = _run(paged, _requests(cfg, n_req, max_new))
-    csv_row("serve_dense_tok_s", dt_d / max(tok_d, 1) * 1e6,
-            f"{tok_d / dt_d:.1f} tok/s, steps={steps_d}")
-    csv_row("serve_paged_tok_s", dt_p / max(tok_p, 1) * 1e6,
-            f"{tok_p / dt_p:.1f} tok/s, steps={steps_p}")
+    bench_row("serve_dense_tok_s", dt_d / max(tok_d, 1) * 1e6,
+              unit="us_per_tok", tok_s=f"{tok_d / dt_d:.1f}",
+              steps=steps_d)
+    bench_row("serve_paged_tok_s", dt_p / max(tok_p, 1) * 1e6,
+              unit="us_per_tok", tok_s=f"{tok_p / dt_p:.1f}",
+              steps=steps_p)
     assert steps_p == steps_d, (
         f"paging changed the engine schedule: {steps_p} vs {steps_d} steps")
 
@@ -96,10 +98,11 @@ def main(quick: bool = False):
                              max_new_tokens=r.max_new_tokens,
                              adapter=r.adapter) for r in cap_reqs])
     _run(paged_cap, cap_reqs)
-    csv_row("kv_dense_max_slots_at_budget", dense_cap.last_run_max_live,
-            f"budget={budget_tokens} tok")
-    csv_row("kv_paged_max_slots_at_budget", paged_cap.last_run_max_live,
-            f"budget={budget_tokens} tok, pages={paged_cap.kv.num_pages - 1}")
+    bench_row("kv_dense_max_slots_at_budget", dense_cap.last_run_max_live,
+              unit="slots", budget_tokens=budget_tokens)
+    bench_row("kv_paged_max_slots_at_budget", paged_cap.last_run_max_live,
+              unit="slots", budget_tokens=budget_tokens,
+              pages=paged_cap.kv.num_pages - 1)
     assert paged_cap.last_run_max_live > dense_cap.last_run_max_live, (
         f"paged engine must sustain strictly more concurrent slots than "
         f"dense at equal cache memory: {paged_cap.last_run_max_live} vs "
@@ -107,10 +110,11 @@ def main(quick: bool = False):
 
     # -- prefix reuse -------------------------------------------------------
     st = paged_cap.kv.stats
-    csv_row("kv_prefix_hit_ratio", 100.0 * paged_cap.kv.prefix_hit_ratio(),
-            f"hits={st['prefix_hits']}/{st['prefix_queries']}, "
-            f"aliased={st['pages_aliased']}, "
-            f"allocated={st['pages_allocated']}")
+    bench_row("kv_prefix_hit_ratio",
+              100.0 * paged_cap.kv.prefix_hit_ratio(), unit="percent",
+              hits=f"{st['prefix_hits']}/{st['prefix_queries']}",
+              aliased=st["pages_aliased"],
+              allocated=st["pages_allocated"])
     assert st["prefix_hits"] > 0, "shared-prefix workload never hit a page"
     print("paged-kv guardrails passed: schedule identical, "
           f"capacity {paged_cap.last_run_max_live} > "

@@ -6,7 +6,7 @@ Key validation: PSOFT_{r=46} on DeBERTaV3-base (all linear layers) must give
 """
 import jax
 
-from benchmarks.common import DEBERTA, LLAMA32_3B, csv_row, method_cfgs
+from benchmarks.common import DEBERTA, LLAMA32_3B, bench_row, method_cfgs
 from repro.core import peft
 
 # (module d_in, d_out) per transformer layer (q,k,v,o + ffn up/down)
@@ -28,7 +28,7 @@ def main():
     for name, cfg in cfgs.items():
         n = count_model(DEBERTA, cfg)
         results[name] = n
-        csv_row(f"params_deberta_{name}", 0, f"{n}")
+        bench_row(f"params_deberta_{name}", n, unit="params")
 
     # --- paper-reported anchors (Table 2) ---
     assert abs(results["psoft"] - 0.08e6) < 0.02e6, results["psoft"]
@@ -42,7 +42,7 @@ def main():
     cfgs4 = method_cfgs(rank_psoft=352, rank_lora=8, rank_xs=248)
     for name in ("psoft", "lora", "lora_xs"):
         n = count_model(LLAMA32_3B, cfgs4[name])
-        csv_row(f"params_llama3b_{name}", 0, f"{n}")
+        bench_row(f"params_llama3b_{name}", n, unit="params")
         results[f"llama_{name}"] = n
     # Table 4: PSOFT_{r=352} ~ 12.2M vs LoRA_{r=8} ~ 12.2M (matched budget)
     ratio = results["llama_psoft"] / results["llama_lora"]

@@ -20,7 +20,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import csv_row, nudge_psoft
+from benchmarks.common import bench_row, nudge_psoft
 from repro.configs import get_config
 from repro.models import model as model_lib
 from repro.obs import NOOP, InMemoryTracker, NoopTracker
@@ -68,14 +68,14 @@ def main(quick: bool = False):
             (_run(eng, order, prompts, max_new) for _ in range(3)),
             key=lambda r: r[0] / r[1])
         tok_s[name], steps[name] = toks / dt, n_steps
-        csv_row(f"serve_{name}", dt / toks * 1e6,
-                f"{toks / dt:.1f} tok/s, {n_steps} steps")
-    csv_row("serve_interleaved_slowdown",
-            tok_s["homogeneous"] / tok_s["interleaved"],
-            "x wall-clock vs homogeneous (informational)")
+        bench_row(f"serve_{name}", dt / toks * 1e6, unit="us_per_tok",
+                  tok_s=f"{toks / dt:.1f}", steps=n_steps)
+    bench_row("serve_interleaved_slowdown",
+              tok_s["homogeneous"] / tok_s["interleaved"], unit="ratio",
+              note="wall-clock vs homogeneous (informational)")
     step_ratio = steps["interleaved"] / steps["homogeneous"]
-    csv_row("serve_interleaved_step_ratio", step_ratio,
-            "engine steps vs homogeneous (guardrail: <= 1.2)")
+    bench_row("serve_interleaved_step_ratio", step_ratio, unit="ratio",
+              note="engine steps vs homogeneous (guardrail: <= 1.2)")
     if step_ratio > 1.2:
         raise AssertionError(
             f"interleaved adapter traffic took {step_ratio:.2f}x the engine "
@@ -146,9 +146,10 @@ def _noop_overhead_guard(eng, order, prompts, max_new, quick):
     calls_long, steps_long = calls_for(16)
     assert steps_long > steps_short, "guard needs differing decode lengths"
     per_step = (calls_long - calls_short) / (steps_long - steps_short)
-    csv_row("serve_noop_tracker_calls_per_decode_step", per_step,
-            f"tracker calls added per extra decode step "
-            f"(guardrail: == 0; {calls_short} calls total either way)")
+    bench_row("serve_noop_tracker_calls_per_decode_step", per_step,
+              unit="calls_per_step",
+              note=f"guardrail: == 0; {calls_short} calls total "
+                   f"either way")
     if calls_long != calls_short:
         raise AssertionError(
             f"the decode loop makes {per_step:.2f} tracker calls per step "
@@ -158,13 +159,15 @@ def _noop_overhead_guard(eng, order, prompts, max_new, quick):
 
     # informational wall-clock: default tracker vs full recording
     dt, toks, _ = _run(eng, order, prompts, max_new)
-    csv_row("serve_noop_tracker_tok_s", dt / toks * 1e6,
-            f"{toks / dt:.1f} tok/s, default NoopTracker (informational)")
+    bench_row("serve_noop_tracker_tok_s", dt / toks * 1e6,
+              unit="us_per_tok", tok_s=f"{toks / dt:.1f}",
+              note="default NoopTracker (informational)")
     eng.tracker = InMemoryTracker()
     dt, toks, _ = _run(eng, order, prompts, max_new)
     eng.tracker = NOOP
-    csv_row("serve_inmemory_tracker_tok_s", dt / toks * 1e6,
-            f"{toks / dt:.1f} tok/s with full recording (informational)")
+    bench_row("serve_inmemory_tracker_tok_s", dt / toks * 1e6,
+              unit="us_per_tok", tok_s=f"{toks / dt:.1f}",
+              note="full recording (informational)")
 
 
 if __name__ == "__main__":

@@ -5,7 +5,7 @@ ordering is the claim: PSOFT between LoRA and DoRA, far above GOFT/BOFT)."""
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_row, timeit
+from benchmarks.common import bench_row, timeit
 from repro.configs import TrainConfig, get_config
 from repro.data import SyntheticLMDataset
 from repro.train import trainer
@@ -33,7 +33,8 @@ def main():
                    "goft", "qgoft"):
         t = step_time(method)
         times[method] = t
-        csv_row(f"trainstep_{method}", t * 1e6, f"{1/t:.1f}steps/s")
+        bench_row(f"trainstep_{method}", t * 1e6,
+                  steps_per_s=f"{1/t:.1f}")
     # Fig 4b qualitative ordering: PSOFT faster than the chained-rotation
     # OFT variants (GOFT/qGOFT); competitive with LoRA-family
     assert times["psoft"] < times["goft"] * 1.2, times

@@ -1,0 +1,25 @@
+"""repro.analysis — the project-invariant static checker.
+
+AST-based rules over the repo's own contracts (see docs/static_analysis.md):
+
+- HOSTSYNC          device->host syncs in jitted / hot-path functions
+- RNG-DISCIPLINE    key construction outside the sampling counter scheme
+- OBS-GATE          ungated tracker calls on the decode hot path
+- PALLAS-CONTRACT   kernel <-> oracle <-> wrapper <-> test pairing + grids
+- DEPRECATION       shims must warn, warnings must be test-covered
+
+Run ``python -m repro.analysis src benchmarks``; suppress a line with
+``# repro-lint: disable=RULE``; grandfather via ``analysis-baseline.json``.
+Stdlib-only by design (the CI lint job installs no dependencies);
+:mod:`repro.analysis.jaxpr_tools` imports jax lazily for the jaxpr-level
+checks tests use.
+"""
+from . import rules  # noqa: F401  (populates the registry)
+from .config import AnalysisConfig, default_config
+from .core import (RULES, AnalysisResult, FileContext, Finding,
+                   ProjectContext, rule, run_analysis)
+
+__all__ = [
+    "AnalysisConfig", "default_config", "AnalysisResult", "FileContext",
+    "Finding", "ProjectContext", "RULES", "rule", "run_analysis",
+]

@@ -1,0 +1,53 @@
+"""Jaxpr-level checks that complement the AST rules.
+
+AST analysis sees the source; some invariants only exist after tracing.
+The one that matters most here: nothing on a jitted hot path may smuggle
+a host round-trip in through ``pure_callback``/``io_callback`` — an AST
+rule can't see a callback buried three calls deep, but the jaxpr can.
+Tests assert :func:`assert_no_host_callbacks` over the fused sampler and
+kernel wrappers.
+
+jax is imported lazily so the rest of :mod:`repro.analysis` (and the CI
+lint job, which installs nothing) stays stdlib-only.
+"""
+from __future__ import annotations
+
+from typing import Iterator, List
+
+#: primitives that re-enter the host mid-computation
+HOST_CALLBACK_PRIMITIVES = frozenset({
+    "pure_callback", "io_callback", "callback", "debug_callback",
+    "host_callback_call", "outside_call",
+})
+
+
+def _iter_eqns(jaxpr) -> Iterator:
+    """Every equation in ``jaxpr``, recursing into call/scan/cond bodies."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            for sub in (val if isinstance(val, (list, tuple)) else (val,)):
+                inner = getattr(sub, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    yield from _iter_eqns(inner)
+                elif hasattr(sub, "eqns"):
+                    yield from _iter_eqns(sub)
+
+
+def host_callback_primitives(fn, *args, **kwargs) -> List[str]:
+    """Names of host-callback primitives appearing anywhere in the jaxpr of
+    ``fn(*args, **kwargs)`` (traced abstractly; nothing executes)."""
+    import jax
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return [eqn.primitive.name for eqn in _iter_eqns(closed.jaxpr)
+            if eqn.primitive.name in HOST_CALLBACK_PRIMITIVES]
+
+
+def assert_no_host_callbacks(fn, *args, **kwargs) -> None:
+    """Raise AssertionError if tracing ``fn`` yields any host-callback
+    primitive — i.e. a hidden device->host sync inside compiled code."""
+    bad = host_callback_primitives(fn, *args, **kwargs)
+    if bad:
+        raise AssertionError(
+            f"host callback primitive(s) {sorted(set(bad))} inside a "
+            f"function expected to stay on-device")

@@ -1,0 +1,2 @@
+"""Rule modules — importing this package populates the registry."""
+from . import deprecation, hostsync, obsgate, pallas, rng  # noqa: F401

@@ -1,0 +1,121 @@
+"""HOSTSYNC — no device->host synchronization inside jitted or hot-path
+functions.
+
+``.item()``, ``np.asarray``/``np.array``, ``jax.device_get`` and
+``int()``/``float()`` on array elements block the dispatch pipeline: each
+one is a full device round-trip, and one stray call in the decode loop
+serializes every step behind it.  Inside *jitted* functions they are worse
+— they force a trace-time concretization error or a silent host callback.
+
+Jitted functions are detected from the file itself (``@jax.jit``,
+``@functools.partial(jax.jit, ...)`` decorators, and ``jax.jit(fn)``
+wrapping of a local def); host-side hot functions come from
+``cfg.hostsync_hot``.  The engine's sanctioned boundary — ONE batched
+``jax.device_get`` after the fused sampler — is allowlisted per
+``(path, qualname, call)`` in ``cfg.hostsync_allow``.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+from typing import Iterator, Set
+
+from ..core import FileContext, Finding, match_any, rule
+
+#: host-transfer calls, by unparsed callee
+_SYNC_CALLS = {
+    "np.asarray", "np.array", "numpy.asarray", "numpy.array",
+    "jax.device_get", "onp.asarray", "onp.array",
+}
+_JIT_NAMES = {"jax.jit", "jit", "jax.pmap", "pmap"}
+
+
+def _unparse(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:                                    # pragma: no cover
+        return ""
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """``jax.jit`` / ``functools.partial(jax.jit, ...)`` /
+    ``jax.jit(...)`` as a decorator expression."""
+    if _unparse(node) in _JIT_NAMES:
+        return True
+    if isinstance(node, ast.Call):
+        fn = _unparse(node.func)
+        if fn in _JIT_NAMES:
+            return True
+        if fn in ("functools.partial", "partial") and node.args \
+                and _unparse(node.args[0]) in _JIT_NAMES:
+            return True
+    return False
+
+
+def jitted_functions(ctx: FileContext) -> Set[ast.FunctionDef]:
+    """Defs jitted in this file, by decorator or by a later
+    ``jax.jit(name, ...)`` wrapping call."""
+    wrapped_names: Set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and _unparse(node.func) in _JIT_NAMES \
+                and node.args and isinstance(node.args[0], ast.Name):
+            wrapped_names.add(node.args[0].id)
+    out: Set[ast.FunctionDef] = set()
+    for fn in ctx.functions():
+        if fn.name in wrapped_names or \
+                any(_is_jit_expr(d) for d in fn.decorator_list):
+            out.add(fn)
+    return out
+
+
+def _call_key(node: ast.Call) -> str:
+    """Canonical key for a flagged call: the unparsed callee, or ``.item``
+    for method-style item() pulls."""
+    if isinstance(node.func, ast.Attribute) and node.func.attr == "item" \
+            and not node.args:
+        return ".item"
+    name = _unparse(node.func)
+    if name in _SYNC_CALLS:
+        return name
+    return ""
+
+
+def _scalar_cast_on_subscript(node: ast.Call) -> bool:
+    if not (isinstance(node.func, ast.Name)
+            and node.func.id in ("int", "float") and len(node.args) == 1):
+        return False
+    arg = node.args[0]
+    # x[i] concretizes a traced array; x.shape[0] is static metadata
+    return isinstance(arg, ast.Subscript) and ".shape" not in _unparse(arg)
+
+
+@rule("HOSTSYNC")
+def check_hostsync(ctx: FileContext, cfg) -> Iterator[Finding]:
+    """Device->host sync calls in jitted or configured hot-path functions."""
+    jitted = jitted_functions(ctx)
+    hot_globs = cfg.hostsync_hot.get(ctx.path, ())
+    for fn in ctx.functions():
+        qn = ctx.qualname(fn)
+        is_jit = fn in jitted
+        is_hot = match_any(qn, hot_globs)
+        if not (is_jit or is_hot):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            key = _call_key(node)
+            if not key and is_jit and _scalar_cast_on_subscript(node):
+                key = f"{node.func.id}()"
+            if not key:
+                continue
+            call_qn = ctx.qualname(node)
+            if any(fnmatch.fnmatch(ctx.path, pg)
+                   and fnmatch.fnmatch(call_qn, qg) and key == k
+                   for (pg, qg, k) in cfg.hostsync_allow):
+                continue
+            where = "jitted" if is_jit else "hot-path"
+            yield ctx.finding(
+                "HOSTSYNC", node,
+                f"'{key}' in {where} function '{call_qn}' forces a "
+                f"device->host sync; keep the step loop async (batch "
+                f"transfers through the allowlisted boundary)")

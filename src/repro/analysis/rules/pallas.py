@@ -1,0 +1,181 @@
+"""PALLAS-CONTRACT — every kernel ships with its oracle, wrapper, test,
+and internally-consistent grid geometry.
+
+The kernels directory has a fixed shape: each module defines the raw
+``<name>_pallas`` entry point; ``ref.py`` holds the pure-jnp oracle
+``<name>_ref`` (the correctness ground truth AND the CPU fallback path);
+``ops.py`` exposes the public wrapper with an ``interpret=`` escape hatch
+so every kernel runs on CPU CI; and at least one test exercises oracle
+and wrapper against each other.  A kernel missing any leg is untested
+accelerator code — exactly what the serving stack cannot absorb.
+
+Geometry: a ``BlockSpec`` index map must take one argument per grid axis
+(plus one per scalar-prefetch operand under
+``PrefetchScalarGridSpec``), and must return one coordinate per block-shape
+axis.  Literal grids (including ``grid = (...)`` assigned locally in the
+same function) are checked; dynamically computed grids are skipped.
+"""
+from __future__ import annotations
+
+import ast
+import posixpath
+import re
+from typing import Iterator, List, Optional, Tuple
+
+from ..core import FileContext, Finding, ProjectContext, rule
+
+_PALLAS_SUFFIX = "_pallas"
+
+
+def _unparse(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:                                    # pragma: no cover
+        return ""
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def _resolve_grid(ctx: FileContext, call: ast.Call,
+                  value: ast.AST) -> Optional[int]:
+    """Rank of a grid expression: a literal tuple, or a local ``grid = (...)``
+    assignment in the enclosing function."""
+    if isinstance(value, ast.Tuple):
+        return len(value.elts)
+    if isinstance(value, ast.Name):
+        fn = next((a for a in ctx.ancestors(call)
+                   if isinstance(a, ast.FunctionDef)), None)
+        if fn is None:
+            return None
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and node.targets[0].id == value.id \
+                    and isinstance(node.value, ast.Tuple):
+                return len(node.value.elts)
+    return None
+
+
+def _block_specs(container: ast.AST) -> Iterator[ast.Call]:
+    for node in ast.walk(container):
+        if isinstance(node, ast.Call) and \
+                _unparse(node.func).endswith("BlockSpec"):
+            yield node
+
+
+def _check_spec(ctx: FileContext, spec: ast.Call,
+                expected_arity: int) -> Iterator[Finding]:
+    shape = next((a for a in spec.args if isinstance(a, ast.Tuple)), None)
+    lam = next((v for v in list(spec.args)
+                + [k.value for k in spec.keywords if k.arg == "index_map"]
+                if isinstance(v, ast.Lambda)), None)
+    if lam is None:
+        return
+    arity = len(lam.args.args)
+    if arity != expected_arity:
+        yield ctx.finding(
+            "PALLAS-CONTRACT", spec,
+            f"BlockSpec index map takes {arity} args but the grid (plus "
+            f"scalar-prefetch operands) supplies {expected_arity}")
+    if shape is not None and isinstance(lam.body, ast.Tuple) \
+            and len(lam.body.elts) != len(shape.elts):
+        yield ctx.finding(
+            "PALLAS-CONTRACT", spec,
+            f"BlockSpec index map returns {len(lam.body.elts)} coordinates "
+            f"for a rank-{len(shape.elts)} block shape")
+
+
+def _check_grids(ctx: FileContext) -> Iterator[Finding]:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = _unparse(node.func)
+        if callee.endswith("pallas_call"):
+            grid = _kw(node, "grid")
+            if grid is None:
+                continue                 # grid_spec= handled as its own call
+            rank = _resolve_grid(ctx, node, grid)
+            prefetch = 0
+        elif callee.endswith("PrefetchScalarGridSpec"):
+            grid = _kw(node, "grid")
+            rank = None if grid is None else _resolve_grid(ctx, node, grid)
+            k = _kw(node, "num_scalar_prefetch")
+            prefetch = k.value if isinstance(k, ast.Constant) \
+                and isinstance(k.value, int) else None
+            if prefetch is None:
+                continue
+        else:
+            continue
+        if rank is None:
+            continue
+        for specs_kw in ("in_specs", "out_specs"):
+            container = _kw(node, specs_kw)
+            if container is None:
+                continue
+            for spec in _block_specs(container):
+                yield from _check_spec(ctx, spec, rank + prefetch)
+
+
+@rule("PALLAS-CONTRACT", scope="project")
+def check_pallas(project: ProjectContext, cfg) -> Iterator[Finding]:
+    """Kernel modules must pair with a ref.py oracle, an interpretable
+    ops.py wrapper, and a test referencing both; grids must be consistent."""
+    kdir = cfg.kernels_dir.rstrip("/")
+    ref_ctx = project.files.get(posixpath.join(kdir, "ref.py"))
+    ops_ctx = project.files.get(posixpath.join(kdir, "ops.py"))
+    ref_defs = {f.name for f in ref_ctx.functions()} if ref_ctx else set()
+    test_sources = [c.source
+                    for c in project.iter_matching(cfg.test_globs)]
+    for path in sorted(project.files):
+        if posixpath.dirname(path) != kdir or \
+                posixpath.basename(path) in cfg.kernels_exclude:
+            continue
+        ctx = project.files[path]
+        yield from _check_grids(ctx)
+        entries = [f for f in ctx.functions()
+                   if f.name.endswith(_PALLAS_SUFFIX)]
+        if not entries and "pallas_call" in ctx.source:
+            yield ctx.finding(
+                "PALLAS-CONTRACT", ctx.tree.body[0] if ctx.tree.body
+                else ctx.tree,
+                f"kernel module '{path}' calls pallas_call but defines no "
+                f"'*{_PALLAS_SUFFIX}' entry point to wrap")
+        for fn in entries:
+            base = fn.name[:-len(_PALLAS_SUFFIX)]
+            if f"{base}_ref" not in ref_defs:
+                yield ctx.finding(
+                    "PALLAS-CONTRACT", fn,
+                    f"kernel '{fn.name}' has no oracle '{base}_ref' in "
+                    f"{kdir}/ref.py")
+            if not _ops_wraps(ops_ctx, fn.name):
+                yield ctx.finding(
+                    "PALLAS-CONTRACT", fn,
+                    f"kernel '{fn.name}' has no {kdir}/ops.py wrapper "
+                    f"taking an 'interpret=' CPU fallback")
+            pat = re.compile(
+                rf"ops\.{base}\b|{fn.name}\b|\b{base}\(")
+            if not any(f"{base}_ref" in t and pat.search(t)
+                       for t in test_sources):
+                yield ctx.finding(
+                    "PALLAS-CONTRACT", fn,
+                    f"no test exercises both '{base}_ref' and the "
+                    f"'{base}' wrapper/kernel together")
+
+
+def _ops_wraps(ops_ctx: Optional[FileContext], pallas_name: str) -> bool:
+    if ops_ctx is None:
+        return False
+    for fn in ops_ctx.functions():
+        params = {a.arg for a in fn.args.args + fn.args.kwonlyargs}
+        if "interpret" not in params:
+            continue
+        if any(isinstance(n, (ast.Name, ast.Attribute))
+               and _unparse(n).endswith(pallas_name)
+               for n in ast.walk(fn)):
+            return True
+    return False

@@ -1,0 +1,83 @@
+"""RNG-DISCIPLINE — key construction stays inside the counter scheme.
+
+Speculative decoding's coupled-rejection bit-identity (spec on/off produce
+the same tokens) holds ONLY because every sampling draw derives its key as
+``fold_in(PRNGKey(seed), n_generated)`` inside ``serve/sampling.py`` —
+draws never consume stateful key material, so preemption, resume, and
+draft/verify re-ordering cannot shift later draws.  A ``PRNGKey``/
+``split``/``fold_in`` call anywhere else in library code is either init
+plumbing (allowlist it) or a latent reproducibility bug.
+
+The rule resolves ``jax.random`` aliases (``from jax import random``,
+``import jax.random as jr``) and bare from-imports of the three
+constructors; key *consumers* (``categorical``, ``normal``, ...) are fine
+anywhere — they can't mint entropy.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+from typing import Iterator, Set
+
+from ..core import FileContext, Finding, match_any, rule
+
+_KEY_FNS = ("PRNGKey", "split", "fold_in")
+
+
+def _random_aliases(ctx: FileContext) -> Set[str]:
+    """Local names bound to the ``jax.random`` module."""
+    out: Set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "jax.random" and a.asname:
+                    out.add(a.asname)
+        elif isinstance(node, ast.ImportFrom) and node.module == "jax":
+            for a in node.names:
+                if a.name == "random":
+                    out.add(a.asname or "random")
+    return out
+
+
+def _bare_key_fns(ctx: FileContext) -> Set[str]:
+    """Names from-imported out of ``jax.random`` that mint/derive keys."""
+    out: Set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "jax.random":
+            for a in node.names:
+                if a.name in _KEY_FNS:
+                    out.add(a.asname or a.name)
+    return out
+
+
+@rule("RNG-DISCIPLINE")
+def check_rng(ctx: FileContext, cfg) -> Iterator[Finding]:
+    """PRNGKey/split/fold_in outside the sampling counter scheme and the
+    allowlisted init paths."""
+    if not match_any(ctx.path, cfg.rng_scope):
+        return
+    aliases = _random_aliases(ctx)
+    bare = _bare_key_fns(ctx)
+    flagged_names = {f"jax.random.{m}" for m in _KEY_FNS}
+    flagged_names |= {f"{a}.{m}" for a in aliases for m in _KEY_FNS}
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        try:
+            name = ast.unparse(node.func)
+        except Exception:                                # pragma: no cover
+            continue
+        hit = name in flagged_names or \
+            (isinstance(node.func, ast.Name) and node.func.id in bare)
+        if not hit:
+            continue
+        qn = ctx.qualname(node)
+        if any(fnmatch.fnmatch(ctx.path, pg) and fnmatch.fnmatch(qn, qg)
+               for (pg, qg) in cfg.rng_allow):
+            continue
+        yield ctx.finding(
+            "RNG-DISCIPLINE", node,
+            f"'{name}' in '{qn}': key construction outside the sampling "
+            f"counter scheme breaks spec-decode bit-identity; derive draws "
+            f"from fold_in(PRNGKey(seed), n_generated) in serve/sampling.py "
+            f"or allowlist a genuine init path")

@@ -733,10 +733,12 @@ class ServeEngine:
         toks, chosen, top_ids, top_lps = self._sample_fn(
             logits_rows, temps, ks, ps, seeds, counters,
             want_logprobs=want_lp)
-        toks = np.asarray(toks)
+        # ONE batched device->host transfer for the step's sample outputs
+        # (None logprob leaves pass through untouched) instead of a
+        # blocking np.asarray round-trip per array
+        toks, chosen, top_ids, top_lps = jax.device_get(
+            (toks, chosen, top_ids, top_lps))
         if want_lp:
-            chosen = np.asarray(chosen)
-            top_ids, top_lps = np.asarray(top_ids), np.asarray(top_lps)
             for j, r in enumerate(reqs):
                 n = 0 if r is None else self._sampling_for(r).logprobs
                 if n:
@@ -1385,7 +1387,7 @@ class ServeEngine:
             jnp.asarray(positions), jnp.asarray(ids),
             temps, ks, ps, seeds, counters, k=k)
         kv.pools = new_pools
-        drafted = np.asarray(drafted)          # (slots, k)
+        drafted = jax.device_get(drafted)      # (slots, k) — one D2H pull
         self._step_spent += cm.draft_cost(k)
         # --- verify: one g-row, (k+1)-wide paged prefill -----------------
         toks = np.zeros((g, w), np.int32)
@@ -1420,11 +1422,14 @@ class ServeEngine:
                       for (_i, r, *_rest) in group)
         target, chosen, top_ids, top_lps = self._sample_fn(
             flat, temps, ks, ps, seeds, counters, want_logprobs=want_lp)
-        target = np.asarray(target).reshape((g, w))
+        # batch the accept-path materialization the same way: one transfer
+        target, chosen, top_ids, top_lps = jax.device_get(
+            (target, chosen, top_ids, top_lps))
+        target = target.reshape((g, w))
         if want_lp:
-            chosen = np.asarray(chosen).reshape((g, w))
-            top_ids = np.asarray(top_ids).reshape((g, w, -1))
-            top_lps = np.asarray(top_lps).reshape((g, w, -1))
+            chosen = chosen.reshape((g, w))
+            top_ids = top_ids.reshape((g, w, -1))
+            top_lps = top_lps.reshape((g, w, -1))
         handled: Dict[int, int] = {}
         sum_a = 0
         for j, (i, r, sc, pos, _m, n0, _k) in enumerate(group):
@@ -1882,8 +1887,9 @@ class ServeEngine:
             n_active = sum(r is not None for r in self.active)
             n_queued = len(self.scheduler) + len(trace) - next_arrival
             # count every truncated run, even after the warning dedups
-            self._tracker.count("engine/warnings/truncation",
-                                step=self._obs_step)
+            if self._obs:
+                self._tracker.count("engine/warnings/truncation",
+                                    step=self._obs_step)
             if not self._warned_truncation:
                 # once per engine: repeated truncated runs used to re-emit
                 # an identical warning every time

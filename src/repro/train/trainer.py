@@ -136,12 +136,16 @@ def log_step_metrics(tracker, step: int, metrics: Dict,
 # sharding for the train state
 # ---------------------------------------------------------------------------
 
-def state_shardings(cfg: ModelConfig, tc: TrainConfig, mesh, rules):
+def state_shardings(cfg: ModelConfig, tc: TrainConfig, mesh, rules,
+                    seed: Optional[int] = None):
     """NamedShardings for a TrainState (abstract), via logical param axes.
 
-    Returns (sharding_tree, abstract_state)."""
+    Returns (sharding_tree, abstract_state).  ``seed`` defaults to
+    ``tc.seed``: the key only feeds ``jax.eval_shape`` (shapes don't
+    depend on it), but threading the launch seed keeps every PRNGKey in
+    the process derived from the one config knob instead of a literal."""
     from repro.sharding import named_sharding as ns
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(tc.seed if seed is None else seed)
     abstract = jax.eval_shape(lambda k: init_train_state(k, cfg, tc), key)
     params_abs = adamw.combine(abstract.trainable, abstract.frozen)
     axes = model_lib.param_axes(cfg, params_abs)

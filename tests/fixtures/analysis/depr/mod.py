@@ -1,0 +1,19 @@
+"""DEPRECATION fixtures: a covered shim, an uncovered one, a silent one.
+
+Parsed by the rule engine in tests, never executed.
+"""
+import warnings
+
+
+def covered_shim():
+    warnings.warn("use new_api instead", DeprecationWarning, stacklevel=2)
+
+
+def uncovered_shim():
+    # TP: warns, but no test exercises the warning
+    warnings.warn("use new_api instead", DeprecationWarning, stacklevel=2)
+
+
+def silent_shim():
+    """Deprecated: use new_api instead."""
+    return 1                          # TP: declares DEPRECATED, never warns

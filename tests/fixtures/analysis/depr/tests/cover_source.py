@@ -1,0 +1,11 @@
+"""Covers covered_shim's DeprecationWarning; the other shims in mod.py
+stay deliberately unexercised.
+
+Named without a test_ prefix so pytest never collects it.
+"""
+import pytest
+
+
+def check_covered_shim_warns():
+    with pytest.warns(DeprecationWarning):
+        covered_shim()                            # noqa: F821

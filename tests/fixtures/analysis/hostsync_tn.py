@@ -1,0 +1,21 @@
+"""HOSTSYNC true negatives: clean jit, allowlisted boundary, suppression,
+cold helpers.  Parsed by the rule engine in tests, never executed."""
+import jax
+import numpy as np
+
+
+def step(x):
+    return x * 2
+
+
+step_jit = jax.jit(step)
+
+
+def hot_loop(x):
+    out = jax.device_get(x)      # allowlisted host boundary
+    extra = np.asarray(x)  # repro-lint: disable=HOSTSYNC
+    return out, extra
+
+
+def cold_helper(x):
+    return np.asarray(x)         # neither jitted nor hot: fine

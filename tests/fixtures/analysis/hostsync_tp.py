@@ -1,0 +1,23 @@
+"""HOSTSYNC true positives: syncs inside jitted and hot-path functions.
+
+Parsed by the rule engine in tests, never imported or executed.
+"""
+import jax
+import numpy as np
+
+
+def step(x):
+    y = np.asarray(x)            # TP: host transfer inside a jitted body
+    return y.sum()
+
+
+step_jit = jax.jit(step)
+
+
+@jax.jit
+def decorated(x):
+    return int(x[0])             # TP: scalar concretization under trace
+
+
+def hot_loop(x):
+    return x.item()              # TP: .item() in a configured hot path

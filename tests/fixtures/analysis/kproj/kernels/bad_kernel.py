@@ -1,0 +1,24 @@
+"""PALLAS-CONTRACT true positives: index-map arity and coordinate-count
+mismatches (plus no oracle, no interpretable wrapper, no test — those
+findings come from the missing counterparts, not this file's text).
+
+Parsed by the rule engine in tests, never executed.
+"""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _body(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def bad_kernel_pallas(x):
+    return pl.pallas_call(
+        _body,
+        grid=(2, 2),
+        # TP: one index arg for a two-axis grid
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+        # TP: three coordinates for a rank-2 block shape
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

@@ -1,0 +1,21 @@
+"""A well-formed kernel module: consistent grid, paired oracle/wrapper/test.
+
+Parsed by the rule engine in tests, never executed.
+"""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _body(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def good_kernel_pallas(x):
+    grid = (2, 2)
+    return pl.pallas_call(
+        _body,
+        grid=grid,
+        in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

@@ -1,0 +1,13 @@
+"""Wrappers: good_kernel has the interpret escape hatch, bad_kernel's
+wrapper deliberately lacks it (a true positive)."""
+from .bad_kernel import bad_kernel_pallas
+from .good_kernel import good_kernel_pallas
+
+
+def good_kernel(x, interpret=None):
+    del interpret
+    return good_kernel_pallas(x)
+
+
+def bad_kernel(x):
+    return bad_kernel_pallas(x)       # TP: no interpret= CPU fallback

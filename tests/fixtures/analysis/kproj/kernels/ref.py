@@ -1,0 +1,6 @@
+"""Oracles for the fixture kernels (good_kernel only — bad_kernel's
+missing oracle is a deliberate true positive)."""
+
+
+def good_kernel_ref(x):
+    return x * 2.0

@@ -1,0 +1,13 @@
+"""Mimics a real kernel test: exercises wrapper and oracle together.
+
+Named without a test_ prefix so pytest never collects it; the fixture
+config's test_globs still matches it.
+"""
+import numpy as np
+
+from kernels.ops import good_kernel
+from kernels.ref import good_kernel_ref
+
+x = np.ones((16, 16), np.float32)
+np.testing.assert_allclose(good_kernel(x, interpret=True),
+                           good_kernel_ref(x))

@@ -1,0 +1,19 @@
+"""OBS-GATE true negatives: the three sanctioned gating shapes.
+
+Parsed by the rule engine in tests, never executed.
+"""
+NULL_SPAN = None
+
+
+class Engine:
+    def _decode_live(self, served):
+        if self._obs:
+            self._tracker.count("engine/steps")          # if-gated
+        span = (self._tracker.time_block("decode_s")
+                if self._obs else NULL_SPAN)             # ternary-gated
+        return served, span
+
+    def _observe(self):
+        if not self._obs:
+            return
+        self._tracker.gauge("engine/live", 1.0)          # early-return gate

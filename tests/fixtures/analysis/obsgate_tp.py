@@ -1,0 +1,10 @@
+"""OBS-GATE true positive: ungated tracker call on the decode path.
+
+Parsed by the rule engine in tests, never executed.
+"""
+
+
+class Engine:
+    def _decode_live(self, served):
+        self._tracker.count("engine/steps")      # TP: ungated
+        return served

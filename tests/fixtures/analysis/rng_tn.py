@@ -1,0 +1,13 @@
+"""RNG-DISCIPLINE true negatives: allowlisted init path, consumers only.
+
+Parsed by the rule engine in tests, never executed.
+"""
+import jax
+
+
+def thing_init(key):
+    return jax.random.split(key)      # allowlisted: *init* qualname
+
+
+def consume(key, logits):
+    return jax.random.categorical(key, logits)   # consumers can't mint

@@ -1,0 +1,10 @@
+"""RNG-DISCIPLINE true positive: ad-hoc key minting in library code.
+
+Parsed by the rule engine in tests, never executed.
+"""
+import jax
+
+
+def resample(logits, step):
+    key = jax.random.PRNGKey(step)    # TP: key minted outside the scheme
+    return jax.random.categorical(key, logits)

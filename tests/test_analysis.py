@@ -1,0 +1,230 @@
+"""repro.analysis: per-rule TP/TN fixtures, suppression, baseline
+round-trip, fingerprint stability, the CLI, the repo's own cleanliness,
+and the jaxpr-level host-callback check."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import AnalysisConfig, run_analysis
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.cli import main
+from repro.analysis.config import default_config
+
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "analysis"
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _flat_cfg(**over):
+    base = dict(root=str(FIXTURES), index_globs=("*.py",))
+    base.update(over)
+    return AnalysisConfig(**base)
+
+
+def _hostsync_cfg():
+    return _flat_cfg(
+        hostsync_hot={"hostsync_tp.py": ("hot_loop",),
+                      "hostsync_tn.py": ("hot_loop",)},
+        hostsync_allow=(("hostsync_tn.py", "hot_loop", "jax.device_get"),))
+
+
+# -- HOSTSYNC ---------------------------------------------------------------
+def test_hostsync_true_positives():
+    result = run_analysis(_hostsync_cfg(), ["hostsync_tp.py"])
+    assert [f.rule for f in result.findings] == ["HOSTSYNC"] * 3
+    keys = {(f.symbol, f.line) for f in result.findings}
+    assert {s for s, _ in keys} == {"step", "decorated", "hot_loop"}
+
+
+def test_hostsync_true_negatives_and_suppression():
+    result = run_analysis(_hostsync_cfg(), ["hostsync_tn.py"])
+    assert result.findings == []
+    assert result.suppressed == 1     # the disable=HOSTSYNC np.asarray line
+
+
+# -- RNG-DISCIPLINE ---------------------------------------------------------
+def _rng_cfg():
+    return _flat_cfg(rng_scope=("*.py",), rng_allow=(("*.py", "*init*"),))
+
+
+def test_rng_true_positive():
+    result = run_analysis(_rng_cfg(), ["rng_tp.py"])
+    assert [f.rule for f in result.findings] == ["RNG-DISCIPLINE"]
+    assert result.findings[0].symbol == "resample"
+
+
+def test_rng_true_negatives():
+    result = run_analysis(_rng_cfg(), ["rng_tn.py"])
+    assert result.findings == []
+
+
+# -- OBS-GATE ---------------------------------------------------------------
+def _obsgate_cfg():
+    return _flat_cfg(obsgate_hot={
+        "obsgate_tp.py": ("*._decode_live",),
+        "obsgate_tn.py": ("*._decode_live", "*._observe")})
+
+
+def test_obsgate_true_positive():
+    result = run_analysis(_obsgate_cfg(), ["obsgate_tp.py"])
+    assert [f.rule for f in result.findings] == ["OBS-GATE"]
+    assert result.findings[0].symbol == "Engine._decode_live"
+
+
+def test_obsgate_true_negatives():
+    result = run_analysis(_obsgate_cfg(), ["obsgate_tn.py"])
+    assert result.findings == []
+
+
+# -- PALLAS-CONTRACT --------------------------------------------------------
+def _pallas_cfg():
+    return AnalysisConfig(
+        root=str(FIXTURES / "kproj"), index_globs=("**/*.py",),
+        kernels_dir="kernels", test_globs=("tests/*.py",))
+
+
+def test_pallas_true_positives():
+    result = run_analysis(_pallas_cfg(), ["kernels"])
+    findings = [f for f in result.findings if f.rule == "PALLAS-CONTRACT"]
+    assert len(findings) == len(result.findings)
+    assert all(f.path == "kernels/bad_kernel.py" for f in findings)
+    msgs = " | ".join(f.message for f in findings)
+    assert "takes 1 args" in msgs                # index-map arity
+    assert "returns 3 coordinates" in msgs       # block-shape rank
+    assert "no oracle 'bad_kernel_ref'" in msgs
+    assert "'interpret='" in msgs                # missing wrapper fallback
+    assert "no test exercises" in msgs
+    assert len(findings) == 5
+
+
+def test_pallas_true_negatives_good_kernel():
+    result = run_analysis(_pallas_cfg(), ["kernels/good_kernel.py"])
+    assert result.findings == []
+
+
+# -- DEPRECATION ------------------------------------------------------------
+def _depr_cfg():
+    return AnalysisConfig(
+        root=str(FIXTURES / "depr"), index_globs=("**/*.py",),
+        deprecation_scope=("mod.py",), test_globs=("tests/*.py",))
+
+
+def test_deprecation_tp_and_tn():
+    result = run_analysis(_depr_cfg(), ["mod.py"])
+    assert [f.rule for f in result.findings] == ["DEPRECATION"] * 2
+    symbols = {f.symbol for f in result.findings}
+    assert symbols == {"uncovered_shim", "silent_shim"}   # covered_shim: TN
+
+
+# -- baseline / fingerprints ------------------------------------------------
+def test_baseline_roundtrip(tmp_path):
+    result = run_analysis(_hostsync_cfg(), ["hostsync_tp.py"])
+    assert result.findings
+    path = tmp_path / "baseline.json"
+    baseline_mod.write(path, result.findings)
+    data = json.loads(path.read_text())
+    assert data["version"] == baseline_mod.VERSION
+    assert len(data["findings"]) == len(result.findings)
+    known = baseline_mod.load(path)
+    new, old = baseline_mod.partition(result.findings, known)
+    assert new == [] and len(old) == len(result.findings)
+
+
+def test_fingerprints_survive_line_drift(tmp_path):
+    known = set()
+    result = run_analysis(_hostsync_cfg(), ["hostsync_tp.py"])
+    for f in result.findings:
+        known.add((f.rule, f.path, f.fingerprint))
+    # same file, shifted down by a prologue: fingerprints must still match
+    shifted = tmp_path / "hostsync_tp.py"
+    shifted.write_text("# a new header comment\n\n\n"
+                       + (FIXTURES / "hostsync_tp.py").read_text())
+    cfg = AnalysisConfig(
+        root=str(tmp_path), index_globs=("*.py",),
+        hostsync_hot={"hostsync_tp.py": ("hot_loop",)})
+    moved = run_analysis(cfg, ["hostsync_tp.py"])
+    assert moved.findings
+    new, old = baseline_mod.partition(moved.findings, known)
+    assert new == [] and len(old) == len(moved.findings)
+
+
+# -- the repo itself --------------------------------------------------------
+def test_repo_is_clean(tmp_path, capsys):
+    """The acceptance gate: `python -m repro.analysis src benchmarks` exits
+    0 on this repo (everything real is fixed or baselined)."""
+    out = tmp_path / "report.json"
+    rc = main(["--root", str(REPO_ROOT), "src", "benchmarks",
+               "--format", "json", "--output", str(out)])
+    assert rc == 0, capsys.readouterr().out
+    assert json.loads(out.read_text())["findings"] == []
+
+
+def test_seeded_hot_path_violation_fails(tmp_path, capsys):
+    """CI regression shape: an ungated tracker call introduced into the
+    engine's sample path must flip the checker (and its exit code) red."""
+    engine = REPO_ROOT / "src" / "repro" / "serve" / "engine.py"
+    dst = tmp_path / "src" / "repro" / "serve" / "engine.py"
+    dst.parent.mkdir(parents=True)
+    anchor = "        greedy = SamplingParams.greedy()"
+    text = engine.read_text()
+    assert anchor in text, "seed anchor moved; update this test"
+    dst.write_text(text.replace(
+        anchor,
+        '        self._tracker.count("seeded/violation")\n' + anchor, 1))
+    result = run_analysis(default_config(str(tmp_path)), ["src"])
+    hits = [f for f in result.findings if f.rule == "OBS-GATE"
+            and f.symbol.endswith("_sample_rows")]
+    assert hits, [f.message for f in result.findings]
+    out = tmp_path / "report.json"
+    rc = main(["--root", str(tmp_path), "src", "--no-baseline",
+               "--format", "json", "--output", str(out)])
+    capsys.readouterr()
+    assert rc == 1
+    assert any(f["rule"] == "OBS-GATE"
+               for f in json.loads(out.read_text())["findings"])
+
+
+def test_cli_lists_all_rules(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule_id in ("HOSTSYNC", "RNG-DISCIPLINE", "OBS-GATE",
+                    "PALLAS-CONTRACT", "DEPRECATION"):
+        assert rule_id in out
+
+
+# -- jaxpr-assisted checks --------------------------------------------------
+def test_jaxpr_host_callback_detection():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.analysis import jaxpr_tools
+
+    def clean(x):
+        return jnp.sum(x * 2)
+
+    jaxpr_tools.assert_no_host_callbacks(clean, jnp.ones((4,)))
+
+    def dirty(x):
+        return jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+    with pytest.raises(AssertionError, match="pure_callback"):
+        jaxpr_tools.assert_no_host_callbacks(dirty, jnp.ones((4,)))
+
+
+def test_fused_sampler_has_no_host_callbacks():
+    """The HOSTSYNC rule's jaxpr-level complement: nothing inside the
+    jitted fused sampler re-enters the host."""
+    pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.analysis import jaxpr_tools
+    from repro.serve import sampling
+
+    entries = [(sampling.SamplingParams.greedy(), 0, 0),
+               (sampling.SamplingParams.greedy(), 7, 3)]
+    temps, ks, ps, seeds, counters = sampling.stack(entries)
+    jaxpr_tools.assert_no_host_callbacks(
+        lambda lg: sampling.sample_tokens(lg, temps, ks, ps, seeds,
+                                          counters, want_logprobs=False),
+        jnp.zeros((2, 32), jnp.float32))

@@ -1,0 +1,15 @@
+"""Deprecated shims must keep warning AND keep working — the DEPRECATION
+static rule requires every warn site to be exercised by a test like this
+(see docs/static_analysis.md)."""
+import pytest
+
+from benchmarks import common
+
+
+def test_csv_row_warns_and_still_emits():
+    with pytest.warns(DeprecationWarning, match="csv_row is deprecated"):
+        common.csv_row("deprecation_probe", 12.34, derived="x")
+    rows = [r for r in common.results() if r["name"] == "deprecation_probe"]
+    assert rows, "deprecated shim stopped emitting bench rows"
+    assert rows[-1]["us_per_call"] == pytest.approx(12.3)
+    assert rows[-1]["derived"] == "x"
