@@ -1,0 +1,157 @@
+"""Adapter hot-swap under load: the live-lifecycle guardrails.
+
+One streaming run takes two mid-flight bank mutations (a ``register`` of a
+new adapter and an ``update`` of a live one) while earlier requests are
+still decoding; a static reference engine serves the identical workload
+with every adapter version pre-registered under distinct names.
+
+Guardrails (CI fails on regression):
+
+* **zero token divergence** — every request, in-flight across a swap or
+  admitted after one, matches the static engine token-for-token
+  (epoch pinning + append-only bank extension are exact, not approximate).
+* **bounded swap stall** — each bank-shape change costs exactly ONE new
+  decode executable (``decode_trace_count``), so the swap's decode stall
+  is one recompile per swap by construction; the measured wall-clock of
+  the swap steps and the steady-state p50/p99 step times ride along as
+  informational rows (host timers are too noisy for a CI gate — the
+  trace-count pin is the deterministic form of the same claim).
+* **memory reclaimed** — retiring the updated adapter's old epoch and an
+  unregistered adapter frees real bank bytes through compaction.
+
+Rows feed the ``--json`` artifact CI uploads (see run.py --quick).
+"""
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_row, nudge_psoft
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.serve import Request, ServeEngine
+
+MAX_LEN = 48
+SLOTS = 4
+REGISTER_STEP = 5
+UPDATE_STEP = 9
+
+
+def _prompt(cfg, n, off):
+    return ((np.arange(n, dtype=np.int32) * 3 + 1 + off)
+            % cfg.vocab_size).astype(np.int32)
+
+
+def _trace(cfg, max_new):
+    return [(1, Request(uid=0, prompt=_prompt(cfg, 6, 0),
+                        max_new_tokens=max_new)),
+            (1, Request(uid=1, prompt=_prompt(cfg, 6, 40),
+                        max_new_tokens=max_new, adapter="tuned_a"))]
+
+
+def _late(cfg, uid, adapter):
+    return Request(uid=uid, prompt=_prompt(cfg, 5, 20 * uid),
+                   max_new_tokens=6, adapter=adapter)
+
+
+def main(quick: bool = False):
+    cfg = get_config("tiny")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    a_old = nudge_psoft(params, 0.05)
+    a_new = nudge_psoft(params, 0.11)
+    b = nudge_psoft(params, -0.07)
+    max_new = 12 if quick else 20
+
+    # -- live engine: swaps land mid-run -----------------------------------
+    live = ServeEngine(params, cfg, max_len=MAX_LEN, slots=SLOTS)
+    live.register_adapter("tuned_a", a_old, cfg.peft)
+    tick = []                 # step-boundary timestamps, one per step
+
+    fired = set()             # hooks persist across runs: fire each once
+
+    def hooks(engine, step):
+        tick.append(time.perf_counter())
+        if step == REGISTER_STEP and "reg" not in fired:
+            fired.add("reg")
+            engine.register_adapter("tuned_b", b, cfg.peft)
+            engine.submit(_late(cfg, 2, "tuned_b"))
+        elif step == UPDATE_STEP and "upd" not in fired:
+            fired.add("upd")
+            engine.update_adapter("tuned_a", a_new)
+            engine.submit(_late(cfg, 3, "tuned_a"))
+    live.add_step_hook(hooks)
+    done_live = {r.uid: list(r.generated)
+                 for r in live.run_stream(_trace(cfg, max_new),
+                                          max_steps=512)}
+    assert not live.last_run_truncated
+
+    # -- static reference: every version pre-registered --------------------
+    static = ServeEngine(params, cfg, max_len=MAX_LEN, slots=SLOTS)
+    static.register_adapter("tuned_a", a_old, cfg.peft)
+    static.register_adapter("tuned_b", b, cfg.peft)
+    static.register_adapter("tuned_a_v2", a_new, cfg.peft)
+
+    def static_hooks(engine, step):
+        if step == REGISTER_STEP:
+            engine.submit(_late(cfg, 2, "tuned_b"))
+        elif step == UPDATE_STEP:
+            engine.submit(_late(cfg, 3, "tuned_a_v2"))
+    static.add_step_hook(static_hooks)
+    done_static = {r.uid: list(r.generated)
+                   for r in static.run_stream(_trace(cfg, max_new),
+                                              max_steps=512)}
+    assert not static.last_run_truncated
+
+    diverged = sum(done_live[uid] != done_static[uid] for uid in done_live)
+    bench_row("lifecycle_swap_token_divergence", diverged, unit="requests",
+              detail=f"{len(done_live)} requests across 2 mid-run swaps")
+
+    swaps = sum(1 for e in live.lifecycle.events
+                if e.op in ("register", "update"))
+    recompiles = live.decode_trace_count() - 1     # minus the initial build
+    bench_row("lifecycle_swap_decode_recompiles", recompiles,
+              unit="executables", detail=f"{swaps - 1} mid-run swaps")
+
+    durations = np.diff(np.asarray(tick)) * 1e3    # ms per engine step
+    swap_ms = [durations[REGISTER_STEP - 1], durations[UPDATE_STEP - 1]]
+    steady = np.delete(durations, [REGISTER_STEP - 1, UPDATE_STEP - 1])
+    bench_row("lifecycle_swap_step_stall_ms", max(swap_ms), unit="ms",
+              detail=f"steady p50={np.percentile(steady, 50):.1f}ms, "
+                     f"p99={np.percentile(steady, 99):.1f}ms")
+
+    # -- epoch retirement + compaction reclaim real memory -----------------
+    bytes_before = live.lifecycle.bank_bytes()
+    live.unregister_adapter("tuned_b")
+    done2 = live.run([Request(uid=9, prompt=_prompt(cfg, 5, 0),
+                              max_new_tokens=2, adapter="tuned_a")],
+                     max_steps=64)          # applies the queued unregister
+    assert done2[0].done
+    live.compact_banks()
+    bytes_after = live.lifecycle.bank_bytes()
+    # the run above already auto-compacted the updated adapter's dead
+    # column when the queued unregister applied (compaction rides along
+    # with any swap) — count every compaction via the event trail
+    reclaimed_cols = sum(e.version for e in live.lifecycle.events
+                         if e.op == "compact")
+    bench_row("lifecycle_compaction_reclaimed_kb",
+              (bytes_before - bytes_after) / 1024.0, unit="kb",
+              detail=f"{reclaimed_cols} columns "
+                     f"({bytes_before / 1024:.0f}kb -> "
+                     f"{bytes_after / 1024:.0f}kb)")
+
+    # -- guardrails ---------------------------------------------------------
+    assert diverged == 0, (
+        f"hot-swap changed tokens on {diverged} requests — epoch pinning "
+        f"or bank-extension exactness regressed")
+    assert recompiles == 2, (
+        f"2 bank-shape swaps must cost exactly 2 decode recompiles, "
+        f"got {recompiles}")
+    # dead columns: tuned_a's old version + unregistered tuned_b
+    assert reclaimed_cols >= 2 and bytes_after < bytes_before, (
+        f"compaction reclaimed {reclaimed_cols} columns / "
+        f"{bytes_before - bytes_after} bytes — epoch retirement is not "
+        f"freeing memory")
+
+
+if __name__ == "__main__":
+    main()

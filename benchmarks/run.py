@@ -36,11 +36,12 @@ if _ROOT not in sys.path:
 
 def main(quick: bool = False, json_path: str = "",
          metrics_path: str = "") -> None:
-    from benchmarks import (bench_activation_memory, bench_convergence,
-                            bench_dispatch, bench_geometry, bench_kernels,
-                            bench_neumann, bench_paged_kv, bench_params,
-                            bench_sampling, bench_serve, bench_spec_decode,
-                            bench_speed, bench_streaming)
+    from benchmarks import (bench_activation_memory, bench_adapter_lifecycle,
+                            bench_convergence, bench_dispatch,
+                            bench_geometry, bench_kernels, bench_neumann,
+                            bench_paged_kv, bench_params, bench_sampling,
+                            bench_serve, bench_spec_decode, bench_speed,
+                            bench_streaming)
     from benchmarks import common
     from repro.obs import JsonlTracker
     jsonl = None
@@ -53,13 +54,14 @@ def main(quick: bool = False, json_path: str = "",
                 (bench_paged_kv, {"quick": True}),
                 (bench_streaming, {"quick": True}),
                 (bench_sampling, {"quick": True}),
-                (bench_spec_decode, {"quick": True})]
+                (bench_spec_decode, {"quick": True}),
+                (bench_adapter_lifecycle, {"quick": True})]
     else:
         mods = [(bench_params, {}), (bench_geometry, {}), (bench_neumann, {}),
                 (bench_kernels, {}), (bench_dispatch, {}),
                 (bench_serve, {}), (bench_paged_kv, {}),
                 (bench_streaming, {}), (bench_sampling, {}),
-                (bench_spec_decode, {}),
+                (bench_spec_decode, {}), (bench_adapter_lifecycle, {}),
                 (bench_activation_memory, {}), (bench_speed, {}),
                 (bench_convergence, {})]
     failed = []

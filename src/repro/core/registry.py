@@ -319,10 +319,16 @@ def apply_batched(params: Dict, x: jax.Array, compute_dtype,
     base weights only, e.g. a non-serving caller touching a serve tree).
     The low-rank path never materializes per-slot weight matrices — it runs
     rank-k per-slot matmuls (the Pallas ``gather_delta_matmul`` kernel when
-    ``use_kernel`` and the shape allows, jnp einsums otherwise)."""
+    ``use_kernel`` and the shape allows, jnp einsums otherwise).  A bank may
+    be MIXED ({"left","right","delta"}, from :func:`extend_bank` growing a
+    low-rank bank with a dense newcomer): every column carries an exact zero
+    in the representation it doesn't use, so summing both contributions
+    stays bit-identical for pure columns — but the mixed shape falls off
+    the fused kernel path."""
     x = x.astype(compute_dtype)
     bank = params.get("bank")
     if bank is not None and adapter_ids is not None and "left" in bank \
+            and "delta" not in bank \
             and use_kernel and x.ndim == 3 and x.shape[1] == 1:
         from repro.kernels import ops as kops
         return kops.gather_delta_matmul(
@@ -333,12 +339,112 @@ def apply_batched(params: Dict, x: jax.Array, compute_dtype,
         return y
     if "delta" in bank:
         d = jnp.take(bank["delta"], adapter_ids, axis=0)
-        return y + jnp.einsum("b...d,bdo->b...o", x,
-                              d.astype(compute_dtype))
-    left = jnp.take(bank["left"], adapter_ids, axis=0)
-    right = jnp.take(bank["right"], adapter_ids, axis=0)
-    u = jnp.einsum("b...d,bdk->b...k", x, left.astype(compute_dtype))
-    return y + jnp.einsum("b...k,bko->b...o", u, right.astype(compute_dtype))
+        y = y + jnp.einsum("b...d,bdo->b...o", x, d.astype(compute_dtype))
+    if "left" in bank:
+        left = jnp.take(bank["left"], adapter_ids, axis=0)
+        right = jnp.take(bank["right"], adapter_ids, axis=0)
+        u = jnp.einsum("b...d,bdk->b...k", x, left.astype(compute_dtype))
+        y = y + jnp.einsum("b...k,bko->b...o", u,
+                           right.astype(compute_dtype))
+    return y
+
+
+def _pad_rank(left: jax.Array, right: jax.Array,
+              kmax: int) -> Tuple[jax.Array, jax.Array]:
+    """Zero-pad a low-rank pair to rank ``kmax`` (exact: the padded rank
+    slots contribute +0.0 terms at the END of the contraction, so partial
+    sums of the live ranks are untouched)."""
+    pad = kmax - left.shape[-1]
+    if pad:
+        left = jnp.pad(left, [(0, 0)] * (left.ndim - 1) + [(0, pad)])
+        right = jnp.pad(right, [(0, 0)] * (right.ndim - 2)
+                        + [(0, pad), (0, 0)])
+    return left, right
+
+
+def extend_bank(base_w: jax.Array, bank: Optional[Dict],
+                new_bank: Optional[Dict], n_existing: int,
+                n_new: Optional[int] = None) -> Optional[Dict]:
+    """Append adapter columns to one linear's bank WITHOUT perturbing the
+    existing columns — the hot-swap exactness contract.
+
+    ``bank`` is the linear's current bank (None: all ``n_existing``
+    existing columns sit exactly at the base weight — an implicit
+    all-zero bank).  ``new_bank`` is the new columns' bank from
+    :func:`stack_deltas` over the new adapters ALONE (None: the new
+    columns are all-zero; then ``n_new`` is required).  A missing side is
+    filled with exact zero columns, so the result may be MIXED
+    ({"left","right","delta"}) when a dense newcomer joins a low-rank
+    bank: rebuilding from scratch would flip the live columns' dense/
+    low-rank representation (``stack_deltas`` is all-or-nothing) and
+    change fp rounding under in-flight requests, so existing arrays are
+    only ever concatenated onto — never recomputed.  Rank growth
+    zero-pads (exact +0.0 contributions).  Returns None only when both
+    sides are None."""
+    if bank is None and new_bank is None:
+        return None
+    axis = base_w.ndim - 2          # adapter axis of every bank array
+    lead = base_w.shape[:-2]
+    d_in, d_out = base_w.shape[-2:]
+    if n_new is None:
+        if new_bank is None:
+            raise ValueError("n_new is required when new_bank is None")
+        probe = "left" if "left" in new_bank else "delta"
+        n_new = new_bank[probe].shape[axis]
+    out: Dict[str, jax.Array] = {}
+    old_lr = bank is not None and "left" in bank
+    new_lr = new_bank is not None and "left" in new_bank
+    if old_lr or new_lr:
+        ref = (bank if old_lr else new_bank)
+        kmax = max(bank["left"].shape[-1] if old_lr else 0,
+                   new_bank["left"].shape[-1] if new_lr else 0)
+
+        def lr_side(b, n):
+            if b is not None and "left" in b:
+                return _pad_rank(b["left"], b["right"], kmax)
+            return (jnp.zeros(lead + (n, d_in, kmax), ref["left"].dtype),
+                    jnp.zeros(lead + (n, kmax, d_out), ref["right"].dtype))
+
+        l_old, r_old = lr_side(bank, n_existing)
+        l_new, r_new = lr_side(new_bank, n_new)
+        out["left"] = jnp.concatenate([l_old, l_new], axis=axis)
+        out["right"] = jnp.concatenate([r_old, r_new], axis=axis)
+    old_d = bank is not None and "delta" in bank
+    new_d = new_bank is not None and "delta" in new_bank
+    if old_d or new_d:
+        d_ref = (bank if old_d else new_bank)["delta"]
+
+        def dense_side(b, n):
+            if b is not None and "delta" in b:
+                return b["delta"]
+            return jnp.zeros(lead + (n, d_in, d_out), d_ref.dtype)
+
+        out["delta"] = jnp.concatenate(
+            [dense_side(bank, n_existing), dense_side(new_bank, n_new)],
+            axis=axis)
+    return out
+
+
+def take_bank_columns(bank: Optional[Dict],
+                      idx: Sequence[int]) -> Optional[Dict]:
+    """Slice adapter columns ``idx`` (in order) out of one linear's bank —
+    a pure gather along the adapter axis, so kept columns are bit-exact.
+    A representation whose kept columns are all zero is dropped (its
+    contribution was an exact +0.0 add), and None is returned when
+    nothing remains: the linear reverts to a plain base weight.
+    Eager-only (the zero checks read concrete values)."""
+    import numpy as np
+
+    if bank is None or not len(idx):
+        return None
+    ids = jnp.asarray(list(idx), jnp.int32)
+    out = {k: jnp.take(v, ids, axis=v.ndim - 3) for k, v in bank.items()}
+    if "delta" in out and not np.any(np.asarray(out["delta"])):
+        del out["delta"]
+    if "right" in out and not np.any(np.asarray(out["right"])):
+        out.pop("left", None)
+        out.pop("right", None)
+    return out or None
 
 
 def is_banked_linear(node) -> bool:

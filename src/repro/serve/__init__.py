@@ -2,6 +2,8 @@ from repro.serve.engine import (  # noqa: F401
     BASE_ADAPTER, AdmissionEvent, PreemptionEvent, Request, ServeEngine)
 from repro.serve.kv_cache import (  # noqa: F401
     OutOfPages, PagedKVCache, TRASH_PAGE)
+from repro.serve.lifecycle import (  # noqa: F401
+    AdapterFeed, AdapterLifecycle, BankEpoch, BankSwapEvent)
 from repro.serve.sampling import (  # noqa: F401
     MAX_LOGPROBS, SamplingParams, TokenLogprobs)
 from repro.serve.scheduler import (  # noqa: F401

@@ -83,6 +83,7 @@ from repro.models import model as model_lib
 from repro.obs import NOOP, NULL_SPAN, Tracker
 from repro.serve import sampling as sampling_lib
 from repro.serve.kv_cache import OutOfPages, PagedKVCache, TRASH_PAGE
+from repro.serve.lifecycle import AdapterLifecycle
 from repro.serve.sampling import SamplingParams, TokenLogprobs
 from repro.serve.scheduler import StreamScheduler, TokenCostModel
 from repro.serve.spec import SpecConfig, accepted_prefix
@@ -291,7 +292,15 @@ class ServeEngine:
             BASE_ADAPTER: peft_lib.merge_tree(params, cfg.peft)}
         self._order: List[str] = [BASE_ADAPTER]   # bank index -> name
         self._adapter_index: Dict[str, int] = {BASE_ADAPTER: 0}
-        self._serve_tree = None                   # rebuilt lazily on register
+        self._serve_tree = None                   # built lazily (lifecycle)
+        #: versioned hot-swap state machine: epoch-pinned bank columns,
+        #: deferred mid-run mutation apply, compaction (serve/lifecycle.py)
+        self.lifecycle = AdapterLifecycle(self, BASE_ADAPTER,
+                                          _LINEAR_MODULES)
+        #: fns called as fn(engine, step) at the top of every run_stream
+        #: step, BEFORE queued bank mutations apply — the mutation point
+        #: AdapterFeed and hot-swap tests use (see add_step_hook)
+        self._step_hooks: List = []
         self.max_len = max_len
         self.slots = slots
         legacy = {}
@@ -369,7 +378,13 @@ class ServeEngine:
             raise ValueError(f"bucket_multiple must be >= 1, got "
                              f"{self.bucket_multiple}")
 
+        #: decode executables traced so far — the recompile pin for bank
+        #: hot-swaps: each bank-shape change costs exactly ONE new decode
+        #: executable (see decode_trace_count / bench_adapter_lifecycle)
+        self._decode_traces = 0
+
         def _decode(p, b, c, positions, ids):
+            self._decode_traces += 1           # trace-time side effect
             with peft_registry.batched_adapter_ids(ids):
                 return model_lib.decode_step(p, b, c, positions, self.cfg)
 
@@ -486,6 +501,7 @@ class ServeEngine:
         # every suppressed occurrence, see engine/warnings/*)
         self._warned_dense_fallback = False
         self._warned_truncation = False
+        self._warned_swap_failed = False
         #: cumulative engine steps ever served — the tracker's step domain
         #: (``self._step`` resets per run; tracker steps must be monotone)
         self._obs_step = 0
@@ -580,14 +596,111 @@ class ServeEngine:
         ``peft_cfg`` defaults to the engine's construction-time PEFT config;
         pass the adapter's own config when it was trained with a different
         method / target map (the uniform delta API makes them equivalent at
-        serving time)."""
+        serving time).
+
+        Registration is safe mid-:meth:`run_stream`: the bank grows by one
+        column at the next step boundary (a new :class:`BankEpoch` — see
+        :mod:`repro.serve.lifecycle`) and only requests admitted afterwards
+        see the new adapter; in-flight requests keep their pinned epoch.
+        Re-registering a LIVE name is deprecated — it used to silently
+        clobber the source tree under in-flight requests; it now delegates
+        to :meth:`update_adapter` (same effect, explicit epoch bump)."""
+        if name in self.adapters:
+            if name == BASE_ADAPTER:
+                raise ValueError(
+                    "cannot re-register the 'base' adapter: every bank "
+                    "column stores a delta against the serving base — "
+                    "build a new engine to change base weights")
+            warnings.warn(
+                f"register_adapter({name!r}) on a live adapter name is "
+                f"deprecated: it used to silently clobber the adapter "
+                f"under in-flight requests — call update_adapter() (same "
+                f"effect, with an explicit epoch bump)",
+                DeprecationWarning, stacklevel=2)
+            self.update_adapter(name, params, peft_cfg)
+            return
         pc = peft_cfg if peft_cfg is not None else self.base_peft
         self._sources[name] = (params, pc)
         self.adapters[name] = peft_lib.merge_tree(params, pc)
-        if name not in self._adapter_index:
-            self._adapter_index[name] = len(self._order)
-            self._order.append(name)
-        self._serve_tree = None    # bank shape changed -> rebuild + recompile
+        self.lifecycle.queue_register(name, params, pc)
+
+    def update_adapter(self, name: str, params,
+                       peft_cfg: Optional[PEFTConfig] = None) -> None:
+        """Replace a live adapter's weights with a new fine-tune snapshot
+        (e.g. a newer training checkpoint — :class:`AdapterFeed` calls
+        this).  ``peft_cfg`` defaults to the adapter's previous config.
+
+        Mid-run the swap lands at the next step boundary as a fresh bank
+        column + epoch: requests already admitted finish on the weights
+        (and KV) they started with, requests admitted afterwards serve
+        the new version.  The old column's memory is reclaimed by
+        compaction once its last pinned request finishes."""
+        if name == BASE_ADAPTER:
+            raise ValueError(
+                "cannot update the 'base' adapter: every bank column "
+                "stores a delta against the serving base — build a new "
+                "engine to change base weights")
+        if name not in self.adapters:
+            raise KeyError(
+                f"unknown adapter {name!r}; registered: "
+                f"{self.list_adapters()} (register_adapter adds new names)")
+        prev_source = self._sources[name]
+        prev_merged = self.adapters[name]
+        pc = peft_cfg if peft_cfg is not None else prev_source[1]
+        self._sources[name] = (params, pc)
+        self.adapters[name] = peft_lib.merge_tree(params, pc)
+        self.lifecycle.queue_update(name, params, pc, prev_source,
+                                    prev_merged)
+
+    def unregister_adapter(self, name: str) -> None:
+        """Retire an adapter WITHOUT draining: active and suspended
+        requests pinned to it finish on their admission epoch (their KV
+        alias keys are version-qualified, so nothing can collide); its
+        bank column's memory returns at the next compaction.  Raises
+        while queued never-admitted requests still demand the name —
+        they have no pin to finish on."""
+        if name == BASE_ADAPTER:
+            raise ValueError("cannot unregister the 'base' adapter")
+        if name not in self.adapters:
+            raise KeyError(
+                f"unknown adapter {name!r}; registered: "
+                f"{self.list_adapters()}")
+        if name in self.scheduler.demanded_adapters(self.default_spec):
+            raise ValueError(
+                f"cannot unregister adapter {name!r}: queued requests "
+                f"still demand it (serve or cancel them first; ACTIVE "
+                f"requests are fine — they finish on their pinned epoch)")
+        del self.adapters[name]
+        del self._sources[name]
+        self.lifecycle.queue_unregister(name)
+
+    def add_step_hook(self, fn) -> None:
+        """Register ``fn(engine, step)`` to run at the top of every
+        :meth:`run_stream` step, before queued bank mutations apply — the
+        safe mid-run mutation point (:class:`AdapterFeed` attaches here;
+        tests use it to hot-swap adapters at a deterministic step)."""
+        self._step_hooks.append(fn)
+
+    def decode_trace_count(self) -> int:
+        """Decode executables compiled so far (trace-time counter inside
+        the jitted decode body) — the recompile pin for hot-swaps: one
+        bank-shape change costs exactly one new decode executable."""
+        return self._decode_traces
+
+    def compact_banks(self) -> int:
+        """Reclaim device memory of bank columns no live epoch references
+        (retired adapter versions).  Compaction normally piggybacks on the
+        next swap's rebuild; call this to reclaim NOW (costs the same one
+        recompile).  Returns the number of columns reclaimed."""
+        return self.lifecycle.compact()
+
+    def _pinned_requests(self) -> List[Request]:
+        """Every request holding a bank-column pin: active slots plus the
+        scheduler's resume lane (suspended mid-flight) — what compaction
+        must remap when physical columns move."""
+        out = [r for r in self.active if r is not None]
+        out.extend(self.scheduler.resume_requests())
+        return out
 
     def list_adapters(self) -> List[str]:
         return sorted(self.adapters)
@@ -611,63 +724,21 @@ class ServeEngine:
     # -- adapter bank ------------------------------------------------------
     def _banked_tree(self):
         """Base merged tree with a stacked adapter bank on every linear any
-        adapter updates.  Built eagerly once per adapter-set change."""
-        if self._serve_tree is not None:
-            return self._serve_tree
-        base = self.adapters[BASE_ADAPTER]
-        entries = [self._sources[n] for n in self._order]
-        pcs = [pc for _, pc in entries]
-        kind_counts = {"left": 0, "delta": 0}
+        adapter updates.  Built once, then grown/compacted append-only by
+        the versioned lifecycle (:mod:`repro.serve.lifecycle`): queued
+        mid-run mutations apply here, at step boundaries."""
+        return self.lifecycle.tree()
 
-        def rec(node, raws, path):
-            if isinstance(node, dict):
-                module = path[-1] if path else None
-                if set(node) == {"w"} and module in _LINEAR_MODULES and \
-                        getattr(node["w"], "ndim", 0) >= 2:
-                    bank = peft_registry.stack_deltas(
-                        node["w"],
-                        [(raw, pc, module)
-                         for raw, pc in zip(raws, pcs)])
-                    if bank is None:
-                        return node
-                    kind_counts["delta" if "delta" in bank else "left"] += 1
-                    if "moe" in path:
-                        # expert linears see capacity-dispatched (not
-                        # slot-major) activations, so a per-slot gather
-                        # would pick deltas by dispatch-buffer row
-                        raise ValueError(
-                            f"adapter updates MoE expert linear "
-                            f"{'/'.join(path)}; per-slot heterogeneous "
-                            f"serving does not support expert adapters yet "
-                            f"— serve them merged / single-adapter")
-                    return {"w": node["w"], "bank": bank}
-                return {k: rec(v, [r[k] for r in raws], path + (k,))
-                        for k, v in node.items()}
-            if isinstance(node, list):
-                return [rec(v, [r[i] for r in raws], path + (str(i),))
-                        for i, v in enumerate(node)]
-            # non-linear leaf: heterogeneous serving shares it — refuse
-            # silently-wrong outputs if an adapter changed it
-            for name in self._order[1:]:
-                other = self.adapters[name]
-                leaf = other
-                for k in path:
-                    leaf = leaf[int(k) if isinstance(leaf, list) else k]
-                if not np.array_equal(np.asarray(leaf), np.asarray(node)):
-                    raise ValueError(
-                        f"adapter {name!r} differs from base at non-linear "
-                        f"param {'/'.join(path)}; per-slot serving only "
-                        f"covers linear-module updates")
-            return node
-
-        raws = [raw for raw, _ in entries]
-        self._serve_tree = rec(base, raws, ())
-        if kind_counts["delta"]:
-            # count EVERY occurrence (the user-facing warning below dedups
-            # to once per engine; suppressed repeats stay observable)
-            self._tracker.count("engine/warnings/dense_fallback",
-                                kind_counts["delta"], step=self._obs_step)
-        if kind_counts["delta"] and not self._warned_dense_fallback:
+    def _note_bank_kinds(self, kind_counts: Dict[str, int]) -> None:
+        """Account one bank build/extension's low-rank vs dense column
+        counts: the tracker counts EVERY dense fallback (suppressed
+        repeats stay observable); the user-facing warning dedups to once
+        per engine."""
+        if not kind_counts["delta"]:
+            return
+        self._tracker.count("engine/warnings/dense_fallback",
+                            kind_counts["delta"], step=self._obs_step)
+        if not self._warned_dense_fallback:
             # always exact, but N·d_in·d_out fp32 per linear — make the
             # memory cliff visible instead of silently eating it (once per
             # engine: every bank rebuild would otherwise re-fire it)
@@ -680,7 +751,48 @@ class ServeEngine:
                 f"exactly: serving from a fine-tuned base tree, or "
                 f"PiSSA/DoRA/OFT-family/full-FT adapters, all fall back "
                 f"(see docs/serving.md).")
-        return self._serve_tree
+
+    def _refresh_tree(self, tree):
+        """Apply queued bank mutations at a step boundary.  A failing
+        mutation must not take down the in-flight batch: the lifecycle
+        rolls it back (previous epoch intact, engine-side registration
+        undone) and the failure surfaces as a once-per-engine warning plus
+        the ``engine/bank/swap_failed`` tracker event — the pre-run build
+        still raises loudly (see run_stream's first _banked_tree call)."""
+        if not self.lifecycle.dirty:
+            return tree
+        try:
+            return self._banked_tree()
+        except Exception as err:
+            if not self._warned_swap_failed:
+                self._warned_swap_failed = True
+                warnings.warn(
+                    f"mid-run adapter bank swap failed and was rolled "
+                    f"back; the previous epoch keeps serving ({err})")
+            return tree
+
+    def _pin(self, r: Request) -> None:
+        """Pin a freshly admitted request to the current bank epoch."""
+        sc = self._spec_for(r)
+        self.lifecycle.pin(r, sc.draft_adapter if sc is not None else None)
+
+    def _slot_col(self, r: Request) -> int:
+        """The bank column a slot computes with: its admission-pinned
+        column (stable across later swaps/compactions), falling back to
+        the current epoch for unpinned requests (hand-built test states)."""
+        col = getattr(r, "_bank_col", None)
+        return col if col is not None else self._adapter_id(r.adapter)
+
+    def _kv_key(self, r: Request) -> str:
+        """Version-qualified KV prefix-alias key, ``name#version``.  An
+        updated (or unregistered-then-re-registered) adapter's requests
+        must never alias a previous version's cached pages — versions are
+        monotone per name, so stale hits are impossible while same-version
+        requests keep full shared-prefix reuse."""
+        ver = getattr(r, "_kv_ver", None)
+        if ver is None:
+            ver = self.lifecycle.version_of(r.adapter)
+        return f"{r.adapter}#{ver}"
 
     # -- sampling ----------------------------------------------------------
     def _sampling_for(self, r: Request) -> SamplingParams:
@@ -882,6 +994,7 @@ class ServeEngine:
         while free and self.scheduler.has_work():
             r, _resumed = self.scheduler.window(self._cost_clock)[0]
             self.scheduler.remove(r)
+            self._pin(r)
             seq = np.asarray(r.prompt, np.int32)
             admitted.append((free.pop(0), r, 0, seq, False, len(seq), True))
         groups: Dict[int, list] = {}
@@ -895,7 +1008,7 @@ class ServeEngine:
                     enumerate(group):
                 toks[j, :len(seq)] = seq
                 lens[j] = len(seq)
-                ids[j] = self._adapter_id(r.adapter)
+                ids[j] = self._slot_col(r)
             self._step_spent += self.cost_model.prefill_cost(int(lens.sum()))
             with self._tracker.time_block("engine/prefill_s",
                                           step=self._obs_step):
@@ -915,7 +1028,7 @@ class ServeEngine:
         pool, release its writable pages, and queue it for resumption."""
         r = self.active[slot]
         resident = self._resident_seq(r)
-        r._kv_pin = self.kv.suspend_slot(slot, resident, r.adapter,
+        r._kv_pin = self.kv.suspend_slot(slot, resident, self._kv_key(r),
                                          priority=r.priority)
         self.active[slot] = None
         self.positions[slot] = 0
@@ -982,11 +1095,12 @@ class ServeEngine:
             try:
                 if resumed:
                     prefix = kv.resume_slot(
-                        free[0], seq, r.adapter, reserve_tokens=reserve,
-                        alloc_tokens=alloc, pin=getattr(r, "_kv_pin", None))
+                        free[0], seq, self._kv_key(r),
+                        reserve_tokens=reserve, alloc_tokens=alloc,
+                        pin=getattr(r, "_kv_pin", None))
                     r._kv_pin = None
                 else:
-                    prefix = kv.admit(free[0], seq, r.adapter,
+                    prefix = kv.admit(free[0], seq, self._kv_key(r),
                                       reserve_tokens=reserve,
                                       alloc_tokens=alloc)
                 return prefix, seq
@@ -1002,7 +1116,8 @@ class ServeEngine:
                 # suspend/re-prefill/resume cycles on its victims for
                 # nothing (victims' shared pages free no capacity)
                 need = -(-(len(seq) if reserve is None else reserve)
-                         // kv.page_size) - kv.alias_probe(seq, r.adapter)
+                         // kv.page_size) - kv.alias_probe(seq,
+                                                           self._kv_key(r))
                 gain = sum(kv.exclusive_pages(j) for j in victims)
                 if kv.allocatable_pages() + gain < need:
                     return None
@@ -1028,6 +1143,7 @@ class ServeEngine:
                 break          # retry after running slots free pages
             r, resumed, prefix, seq = pick
             self.scheduler.remove(r)
+            self._pin(r)       # no-op for resumed: they keep their epoch
             slot = free.pop(0)
             frozen.add(slot)
             admitted.append((slot, r, prefix, seq, resumed))
@@ -1079,7 +1195,7 @@ class ServeEngine:
                 toks[j, :len(suffix)] = suffix
                 lens[j] = len(suffix)
                 prefs[j] = prefix
-                ids[j] = self._adapter_id(r.adapter)
+                ids[j] = self._slot_col(r)
                 rows_pt[j] = kv.tables[slot]
             # prefix-table width is 0 (no aliasing in the group: the prefill
             # reduces to the exact dense chunked path) or full — two
@@ -1110,7 +1226,7 @@ class ServeEngine:
             else:
                 nxt = [None] * g
             for slot, r, _pref, seq, _res, end, _fin in group:
-                kv.commit_prompt(slot, seq[:end], r.adapter)
+                kv.commit_prompt(slot, seq[:end], self._kv_key(r))
             if self._obs and self.prefill_chunk_tokens is not None:
                 self._tracker.count("engine/prefill_chunks", g,
                                     step=self._obs_step)
@@ -1242,7 +1358,7 @@ class ServeEngine:
         positions = np.zeros((self.slots,), np.int32)
         for i in live:
             toks[i, 0] = self.active[i].generated[-1]
-            ids[i] = self._adapter_id(self.active[i].adapter)
+            ids[i] = self._slot_col(self.active[i])
             positions[i] = self.positions[i]
         # dead rows decode as ghosts (token 0, adapter 0): their positions
         # are pinned to 0 above, and in paged mode their table rows must be
@@ -1370,7 +1486,9 @@ class ServeEngine:
         entries = [(greedy, 0, 0)] * self.slots
         for (i, r, sc, pos, m, _n0, _k) in group:
             tok0[i, 0] = r.generated[-1]
-            ids[i] = self._adapter_id(sc.draft_adapter)
+            dcol = getattr(r, "_draft_col", None)
+            ids[i] = dcol if dcol is not None \
+                else self._adapter_id(sc.draft_adapter)
             positions[i] = pos
             entries[i] = (self._sampling_for(r), self._seed_for(r), m)
         # every non-group row (dead, mid-prefill, plain-decode, other spec
@@ -1399,7 +1517,7 @@ class ServeEngine:
             toks[j, 0] = r.generated[-1]
             toks[j, 1:] = drafted[i]
             prefs[j] = pos
-            vids[j] = self._adapter_id(r.adapter)
+            vids[j] = self._slot_col(r)
             rows_pt[j] = kv.tables[i]
         # prefix width is always full: pos >= 1 (a prompt token plus the
         # prefill-sampled first token are resident before any decode)
@@ -1478,6 +1596,7 @@ class ServeEngine:
         r.finish_reason = reason
         r.finish_step = step
         r.finish_cost = self._cost_clock
+        self.lifecycle.release(r)
         self._resolve_finished(r, finished)
         self._inflight.discard(r.uid)
         self.active[slot] = None
@@ -1631,6 +1750,12 @@ class ServeEngine:
         request.preemptions = 0
         request._prefill_done = True
         request._prefill_pos = 0
+        # epoch pins are per-admission: a re-submitted request re-pins to
+        # whatever epoch is current when it is next admitted
+        request._epoch = None
+        request._bank_col = None
+        request._draft_col = None
+        request._kv_ver = None
         request.arrival_step = (self._step if arrival_step is None
                                 else arrival_step)
         # cost-clock arrival stamp: mid-run submissions (trace injections
@@ -1782,6 +1907,12 @@ class ServeEngine:
                 self._pending_trace_uids.discard(r.uid)
                 self.submit(r, arrival_step=s, _validated=True)
                 next_arrival += 1
+            # the step's mutation point: hooks (AdapterFeed, tests) may
+            # register/update/unregister adapters here; queued bank
+            # mutations then apply in one refresh — never mid-step
+            for hook in tuple(self._step_hooks):
+                hook(self, steps)
+            tree = self._refresh_tree(tree)
             # mid-prefill slots advance a chunk before new admissions
             # compete for the step's budget
             self._continue_prefills(tree, steps)
@@ -1903,6 +2034,7 @@ class ServeEngine:
                     continue
                 r.truncated = True
                 self._observe_truncated(r)
+                self.lifecycle.release(r)
                 self._resolve_finished(r, finished)
                 self._inflight.discard(r.uid)
                 self.active[i] = None
@@ -1912,6 +2044,7 @@ class ServeEngine:
             for r in self.scheduler.drain():
                 r.truncated = True
                 self._observe_truncated(r)
+                self.lifecycle.release(r)
                 pin = getattr(r, "_kv_pin", None)
                 if pin is not None:
                     # abandoned suspension: demote its retained pages to

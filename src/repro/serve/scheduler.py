@@ -190,6 +190,28 @@ class StreamScheduler:
     def has_work(self) -> bool:
         return bool(self._pending or self._resume)
 
+    def resume_requests(self) -> List["Request"]:
+        """Suspended requests awaiting resumption.  They keep their
+        admission-time epoch pins, so the engine's bank compaction must
+        remap their pinned columns along with the active slots'."""
+        return list(self._resume)
+
+    def demanded_adapters(self, default_spec=None) -> set:
+        """Adapter names queued NEVER-ADMITTED requests still need from
+        the current epoch: their serving adapters plus their effective
+        speculative draft adapters (``default_spec`` is the engine-wide
+        fallback :class:`~repro.serve.spec.SpecConfig`).  The resume lane
+        is excluded — suspended requests are pinned to the epoch they
+        were admitted under and survive unregistration.  This is what
+        makes ``unregister_adapter`` refuse to orphan queued demand."""
+        names = set()
+        for r in self._pending:
+            names.add(r.adapter)
+            sc = r.spec if r.spec is not None else default_spec
+            if sc is not None and getattr(sc, "k", 0) > 0:
+                names.add(sc.draft_adapter)
+        return names
+
     def __len__(self) -> int:
         return len(self._pending) + len(self._resume)
 

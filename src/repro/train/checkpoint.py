@@ -39,7 +39,16 @@ def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
 
 def save(tree: PyTree, ckpt_dir: str, step: int,
          keep: int = 3, async_save: bool = False,
-         extra_meta: Optional[Dict] = None) -> Optional[threading.Thread]:
+         extra_meta: Optional[Dict] = None,
+         publish: Optional[Callable[[int], None]] = None,
+         ) -> Optional[threading.Thread]:
+    """Write one checkpoint (see module docstring for the commit protocol).
+
+    ``publish``, if given, is called as ``publish(step)`` after the
+    checkpoint directory is durably in place — the serve-while-train
+    hook: hand it ``AdapterFeed.notify`` (thread-safe; async saves call
+    it from the writer thread) so a live engine streams the new step into
+    its adapter bank without polling the directory."""
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = _flatten(tree)   # device_get happens on the caller thread
     meta = {"step": int(step), **(extra_meta or {})}
@@ -65,6 +74,10 @@ def save(tree: PyTree, ckpt_dir: str, step: int,
         except OSError:
             shutil.rmtree(tmp, ignore_errors=True)  # concurrent writer won
         _gc(ckpt_dir, keep)
+        if publish is not None:
+            # after the rename (either writer's): the step is durably
+            # restorable by the time a subscriber hears about it
+            publish(int(step))
 
     if async_save:
         t = threading.Thread(target=_write, daemon=True)

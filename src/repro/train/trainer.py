@@ -42,6 +42,15 @@ def init_train_state(key: jax.Array, cfg: ModelConfig,
                       opt=adamw.adamw_init(tr))
 
 
+def adapter_params(state: TrainState) -> PyTree:
+    """Full param tree of a train state — the object serving consumes:
+    hand it to ``ServeEngine.register_adapter`` / ``update_adapter`` (or
+    let :class:`repro.serve.lifecycle.AdapterFeed` restore + extract it
+    from checkpoints) to serve this fine-tune snapshot live.  Recombines
+    the trained PEFT factors with the frozen base."""
+    return adamw.combine(state.trainable, state.frozen)
+
+
 def _compress(grads: PyTree, dtype: str) -> PyTree:
     """Gradient compression hook: quantize the cross-replica reduction.
 

@@ -1,9 +1,14 @@
 """Deprecated shims must keep warning AND keep working — the DEPRECATION
 static rule requires every warn site to be exercised by a test like this
 (see docs/static_analysis.md)."""
+import jax
 import pytest
 
 from benchmarks import common
+from benchmarks.common import nudge_psoft
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.serve import ServeEngine
 
 
 def test_csv_row_warns_and_still_emits():
@@ -13,3 +18,17 @@ def test_csv_row_warns_and_still_emits():
     assert rows, "deprecated shim stopped emitting bench rows"
     assert rows[-1]["us_per_call"] == pytest.approx(12.3)
     assert rows[-1]["derived"] == "x"
+
+
+def test_register_adapter_reregister_warns_and_delegates():
+    """register_adapter on a LIVE name used to silently clobber the
+    adapter under in-flight requests; the shim now warns and delegates
+    to update_adapter (epoch + version bump, same serving effect)."""
+    cfg = get_config("tiny")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, max_len=32, slots=1)
+    eng.register_adapter("tuned", nudge_psoft(params, 0.05), cfg.peft)
+    with pytest.warns(DeprecationWarning, match="call update_adapter"):
+        eng.register_adapter("tuned", nudge_psoft(params, 0.11), cfg.peft)
+    assert eng.lifecycle.version_of("tuned") == 1, (
+        "deprecated re-register shim stopped delegating to update_adapter")
